@@ -1,0 +1,64 @@
+"""Benchmark aggregator — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the headline
+number or PASS/FAIL claim summary for that experiment), mirroring the
+paper's tables:
+
+  spectral    <- Fig 3  (rho vs budget, 3 graphs)
+  comm_time   <- Fig 1  (per-node delay, 50x headline)
+  convergence <- Figs 4-6 (loss vs epochs / wall-clock, P-DecenSGD)
+  roofline    <- brief SSRoofline (dry-run derived terms)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--skip convergence]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip", nargs="*", default=[])
+    ap.add_argument("--only", nargs="*", default=[])
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_comm_time,
+        bench_convergence,
+        bench_roofline,
+        bench_spectral,
+    )
+
+    benches = {
+        "spectral": bench_spectral.run,
+        "comm_time": bench_comm_time.run,
+        "convergence": bench_convergence.run,
+        "roofline": bench_roofline.run,
+    }
+    print("name,us_per_call,derived")
+    failed = False
+    for name, fn in benches.items():
+        if name in args.skip or (args.only and name not in args.only):
+            continue
+        try:
+            rows, checks, us = fn()
+            npass = sum(ok for _, ok in checks)
+            derived = f"{npass}/{len(checks)} claims pass; {len(rows)} rows"
+            print(f"{name},{us:.1f},{derived}")
+            for cname, ok in checks:
+                print(f"  [{'PASS' if ok else 'FAIL'}] {cname}",
+                      file=sys.stderr)
+                if not ok:
+                    failed = True
+        except Exception:
+            failed = True
+            print(f"{name},nan,ERROR")
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Batched serving example: prefill + autoregressive decode.
+
+Serves a reduced-config model with batched requests through the same
+prefill/decode step functions the multi-pod dry-run lowers at production
+shapes, on a (data x model) CPU mesh.
+
+Usage: PYTHONPATH=src python examples/serve_batched.py --arch mamba2_370m
+"""
+import argparse
+import os
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="internlm2_1_8b")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--prompt-len", type=int, default=48)
+ap.add_argument("--gen", type=int, default=24)
+args = ap.parse_args()
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import sys
+
+sys.argv = [
+    "serve", "--arch", args.arch, "--preset", "tiny",
+    "--batch", str(args.batch), "--prompt-len", str(args.prompt_len),
+    "--gen", str(args.gen), "--data-par", "2", "--model-par", "2",
+]
+from repro.launch.serve import main
+
+main()

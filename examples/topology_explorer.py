@@ -1,0 +1,55 @@
+"""Topology explorer: how MATCHA's gains scale with base-graph density.
+
+Reproduces the paper's Section-5 observation ("MATCHA gives more
+communication reduction for denser base graphs"): for geometric graphs
+of increasing radius, vanilla DecenSGD's per-iteration delay grows with
+the max degree while MATCHA holds the effective delay ~constant at equal
+error (spectral norm).
+
+Usage: PYTHONPATH=src python examples/topology_explorer.py
+"""
+import numpy as np
+
+from repro.core import (
+    matching_decomposition,
+    named_graph,
+    plan_matcha,
+    plan_vanilla,
+    random_geometric_graph,
+)
+
+
+def find_budget_matching_vanilla_rho(g, *, tol=0.02):
+    """Smallest CB whose rho is within tol of vanilla's (bisection)."""
+    v = plan_vanilla(g)
+    lo, hi = 0.05, 1.0
+    best = (1.0, v.rho)
+    for _ in range(12):
+        mid = 0.5 * (lo + hi)
+        m = plan_matcha(g, mid, budget_steps=600)
+        if m.rho <= v.rho + tol:
+            best = (mid, m.rho)
+            hi = mid
+        else:
+            lo = mid
+    return best, v
+
+
+def main():
+    print(f"{'radius':>7} {'maxdeg':>7} {'M':>3} {'vanilla rho':>12} "
+          f"{'CB*':>6} {'rho@CB*':>8} {'delay(van)':>10} {'delay(MATCHA)':>13}")
+    for radius in (0.36, 0.45, 0.55, 0.65, 0.8):
+        g = random_geometric_graph(16, radius, seed=5)
+        ms = matching_decomposition(g)
+        (cb, rho), v = find_budget_matching_vanilla_rho(g)
+        delay_v = len(ms)                        # all matchings, every iter
+        delay_m = cb * len(ms)                   # expected units / iter
+        print(f"{radius:7.2f} {g.max_degree():7d} {len(ms):3d} "
+              f"{v.rho:12.4f} {cb:6.2f} {rho:8.4f} {delay_v:10d} "
+              f"{delay_m:13.2f}")
+    print("\nDenser base graph -> vanilla delay grows ~linearly with max "
+          "degree;\nMATCHA holds delay ~flat at matched error (paper Fig. 5).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Checkpointing: pytree save/restore, per decentralized node.
+
+Format: one ``.npz`` per checkpoint with flattened path keys plus a
+msgpack sidecar describing the tree structure and step metadata. In a
+decentralized run each node has its OWN model replica, so checkpoints
+are stored per node (``node_00.npz`` ...); ``save_run``/``restore_run``
+handle the stacked (node-axis-leading) layout the trainer uses.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import msgpack
+import numpy as np
+
+# dtypes numpy's npz format cannot store natively: saved as bit-views
+_VIEW_DTYPES = {
+    "bfloat16": (np.uint16, ml_dtypes.bfloat16),
+    "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn),
+    "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2),
+}
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten(tree: PyTree, prefix: str = "") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}{_SEP}"))
+    else:
+        arr = np.asarray(tree)
+        if arr.dtype.name in _VIEW_DTYPES:
+            arr = arr.view(_VIEW_DTYPES[arr.dtype.name][0])
+        out[prefix.rstrip(_SEP)] = arr
+    return out
+
+
+def _structure(tree: PyTree) -> Any:
+    if isinstance(tree, dict):
+        return {"__kind__": "dict", "keys": {k: _structure(v) for k, v in tree.items()}}
+    if isinstance(tree, tuple):
+        return {"__kind__": "tuple", "items": [_structure(v) for v in tree]}
+    if isinstance(tree, list):
+        return {"__kind__": "list", "items": [_structure(v) for v in tree]}
+    return {"__kind__": "leaf", "dtype": str(np.asarray(tree).dtype)}
+
+
+def _rebuild(struct: Any, flat: Dict[str, np.ndarray], prefix: str = "") -> PyTree:
+    kind = struct["__kind__"]
+    if kind == "dict":
+        return {
+            k: _rebuild(v, flat, f"{prefix}{k}{_SEP}")
+            for k, v in struct["keys"].items()
+        }
+    if kind in ("tuple", "list"):
+        items = [
+            _rebuild(v, flat, f"{prefix}#{i}{_SEP}")
+            for i, v in enumerate(struct["items"])
+        ]
+        return tuple(items) if kind == "tuple" else items
+    arr = flat[prefix.rstrip(_SEP)]
+    want = struct.get("dtype")
+    if want in _VIEW_DTYPES:
+        arr = arr.view(_VIEW_DTYPES[want][1])
+    return jnp.asarray(arr)
+
+
+def save(path: str, tree: PyTree, *, metadata: Optional[dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    side = {
+        "structure": _structure(tree),
+        "metadata": metadata or {},
+    }
+    with open(_sidecar(path), "wb") as f:
+        f.write(msgpack.packb(side, use_bin_type=True))
+
+
+def restore(path: str) -> Tuple[PyTree, dict]:
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    with open(_sidecar(path), "rb") as f:
+        side = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+    flat = {k: npz[k] for k in npz.files}
+    return _rebuild(side["structure"], flat), side["metadata"]
+
+
+def _sidecar(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".meta.msgpack"
+
+
+# ---------------------------------------------------------------------------
+# Decentralized run checkpoints (node-axis-stacked params)
+# ---------------------------------------------------------------------------
+def save_run(
+    directory: str,
+    stacked_params: PyTree,          # leaves with leading node axis
+    opt_state: PyTree,
+    *,
+    step: int,
+    per_node_files: bool = False,
+) -> None:
+    os.makedirs(directory, exist_ok=True)
+    meta = {"step": int(step)}
+    if per_node_files:
+        num_nodes = jax.tree.leaves(stacked_params)[0].shape[0]
+        for n in range(num_nodes):
+            node_tree = jax.tree.map(lambda a: a[n], stacked_params)
+            save(os.path.join(directory, f"node_{n:02d}"), node_tree,
+                 metadata=meta)
+        save(os.path.join(directory, "opt_state"), opt_state, metadata=meta)
+    else:
+        save(os.path.join(directory, "params"), stacked_params, metadata=meta)
+        save(os.path.join(directory, "opt_state"), opt_state, metadata=meta)
+    with open(os.path.join(directory, "ckpt.json"), "w") as f:
+        json.dump({"step": int(step), "per_node_files": per_node_files}, f)
+
+
+def restore_run(directory: str) -> Tuple[PyTree, PyTree, int]:
+    with open(os.path.join(directory, "ckpt.json")) as f:
+        info = json.load(f)
+    if info["per_node_files"]:
+        nodes = sorted(
+            f for f in os.listdir(directory)
+            if f.startswith("node_") and f.endswith(".npz")
+        )
+        trees = [restore(os.path.join(directory, f))[0] for f in nodes]
+        params = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    else:
+        params, _ = restore(os.path.join(directory, "params"))
+    opt_state, _ = restore(os.path.join(directory, "opt_state"))
+    return params, opt_state, info["step"]

@@ -1,0 +1,85 @@
+"""MATCHA core: matching decomposition sampling for decentralized SGD.
+
+Public API:
+    Graph, named_graph, paper_figure1_graph ...  (graphs)
+    matching_decomposition, matching_permutation (matching)
+    optimize_activation_probabilities            (budget, paper eq. 4)
+    optimize_alpha, spectral_norm_rho            (alpha, paper Lemma 1)
+    TopologySchedule + matcha/vanilla/periodic   (topology)
+    mixing_matrix, vanilla_equal_weight_matrix   (mixing, paper eq. 5)
+    plan_matcha / plan_vanilla / plan_periodic   (matcha orchestrator)
+"""
+from repro.core.alpha import AlphaSolution, optimize_alpha, spectral_norm_rho
+from repro.core.budget import (
+    BudgetSolution,
+    expected_laplacians,
+    optimize_activation_probabilities,
+    project_capped_simplex,
+)
+from repro.core.graphs import (
+    Graph,
+    complete_graph,
+    erdos_renyi_graph,
+    hypercube_graph,
+    named_graph,
+    paper_figure1_graph,
+    random_geometric_graph,
+    ring_graph,
+    star_graph,
+    torus_graph,
+)
+from repro.core.matcha import MatchaPlan, plan_matcha, plan_periodic, plan_vanilla
+from repro.core.matching import (
+    matching_decomposition,
+    matching_permutation,
+    misra_gries_coloring,
+)
+from repro.core.mixing import (
+    check_doubly_stochastic,
+    empirical_rho,
+    mixing_matrix,
+    schedule_mixing_matrix,
+    vanilla_equal_weight_matrix,
+)
+from repro.core.topology import (
+    TopologySchedule,
+    matcha_schedule,
+    periodic_schedule,
+    vanilla_schedule,
+)
+
+__all__ = [
+    "AlphaSolution",
+    "BudgetSolution",
+    "Graph",
+    "MatchaPlan",
+    "TopologySchedule",
+    "check_doubly_stochastic",
+    "complete_graph",
+    "empirical_rho",
+    "erdos_renyi_graph",
+    "expected_laplacians",
+    "hypercube_graph",
+    "matcha_schedule",
+    "matching_decomposition",
+    "matching_permutation",
+    "misra_gries_coloring",
+    "mixing_matrix",
+    "named_graph",
+    "optimize_activation_probabilities",
+    "optimize_alpha",
+    "paper_figure1_graph",
+    "periodic_schedule",
+    "plan_matcha",
+    "plan_periodic",
+    "plan_vanilla",
+    "project_capped_simplex",
+    "random_geometric_graph",
+    "ring_graph",
+    "schedule_mixing_matrix",
+    "spectral_norm_rho",
+    "star_graph",
+    "torus_graph",
+    "vanilla_equal_weight_matrix",
+    "vanilla_schedule",
+]

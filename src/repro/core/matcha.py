@@ -1,0 +1,171 @@
+"""MATCHA orchestrator: graph + budget -> (matchings, p, alpha, rho, schedule).
+
+This is the paper's full pipeline (Sections 3.1-3.3) behind one call,
+and the single entry point the distributed runtime consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.alpha import AlphaSolution, optimize_alpha, spectral_norm_rho
+from repro.core.budget import (
+    BudgetSolution,
+    expected_laplacians,
+    optimize_activation_probabilities,
+)
+from repro.core.graphs import Graph
+from repro.core.matching import matching_decomposition, matching_permutation
+from repro.core.topology import (
+    TopologySchedule,
+    matcha_schedule,
+    periodic_schedule,
+    vanilla_schedule,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class MatchaPlan:
+    """Everything needed to run decentralized SGD with MATCHA.
+
+    Computed once, before training (the paper's 'apriori' property).
+    """
+
+    graph: Graph
+    matchings: Tuple[Graph, ...]
+    permutations: np.ndarray          # (M, m) involutions, for ppermute
+    probabilities: np.ndarray         # (M,)
+    alpha: float
+    rho: float                        # exact spectral norm of E[W'W] - J
+    lambda2: float                    # algebraic connectivity of E[L]
+    comm_budget: float
+
+    @property
+    def num_matchings(self) -> int:
+        return len(self.matchings)
+
+    @property
+    def expected_comm_units(self) -> float:
+        """Expected per-iteration communication delay (paper eq. 3)."""
+        return float(self.probabilities.sum())
+
+    @property
+    def vanilla_comm_units(self) -> int:
+        """Per-iteration delay of vanilla DecenSGD: all M matchings."""
+        return self.num_matchings
+
+    def schedule(self, num_iterations: int, seed: int = 0) -> TopologySchedule:
+        return matcha_schedule(
+            self.matchings, self.probabilities, num_iterations, seed
+        )
+
+
+def plan_matcha(
+    graph: Graph,
+    comm_budget: float,
+    *,
+    budget_steps: int = 2000,
+    seed: int = 0,
+) -> MatchaPlan:
+    """Run MATCHA Steps 1-3 for ``graph`` at communication budget CB."""
+    if not graph.is_connected():
+        raise ValueError("MATCHA requires a connected base graph (Theorem 2)")
+    matchings = matching_decomposition(graph)
+    sol: BudgetSolution = optimize_activation_probabilities(
+        matchings, comm_budget, steps=budget_steps, seed=seed
+    )
+    L_bar, L_tilde = expected_laplacians(matchings, sol.probabilities)
+    asol: AlphaSolution = optimize_alpha(L_bar, L_tilde)
+    perms = np.stack([matching_permutation(sg) for sg in matchings])
+    return MatchaPlan(
+        graph=graph,
+        matchings=tuple(matchings),
+        permutations=perms,
+        probabilities=sol.probabilities,
+        alpha=asol.alpha,
+        rho=asol.rho,
+        lambda2=sol.lambda2,
+        comm_budget=comm_budget,
+    )
+
+
+def plan_vanilla(graph: Graph) -> MatchaPlan:
+    """Vanilla DecenSGD expressed in the same plan format (p_j = 1)."""
+    matchings = matching_decomposition(graph)
+    p = np.ones(len(matchings))
+    L_bar, L_tilde = expected_laplacians(matchings, p)   # L_tilde = 0
+    asol = optimize_alpha(L_bar, L_tilde)
+    perms = np.stack([matching_permutation(sg) for sg in matchings])
+    lam = np.linalg.eigvalsh(L_bar)
+    return MatchaPlan(
+        graph=graph,
+        matchings=tuple(matchings),
+        permutations=perms,
+        probabilities=p,
+        alpha=asol.alpha,
+        rho=asol.rho,
+        lambda2=float(lam[1]),
+        comm_budget=1.0,
+    )
+
+
+def plan_periodic(
+    graph: Graph, comm_budget: float
+) -> tuple[MatchaPlan, "TopologySchedule"]:
+    """P-DecenSGD baseline: same plan shape; schedule built separately.
+
+    rho for P-DecenSGD: W^(k) alternates between W_full (with its own
+    optimal alpha) and I. E[W'W] = q * W_full'W_full + (1-q) * I with
+    q = 1/period; we reuse spectral_norm machinery by computing it
+    directly here.
+    """
+    matchings = matching_decomposition(graph)
+    period = max(1, int(round(1.0 / comm_budget)))
+    q = 1.0 / period
+    m = graph.m
+    L = graph.laplacian()
+    # Optimize alpha for the periodic scheme exactly: E[W'W] - J =
+    # q (I - aL)^2 + (1-q) I - J; minimize its spectral norm over a.
+    import numpy.linalg as npl
+
+    lam, V = npl.eigh(L)
+    J = np.full((m, m), 1.0 / m)
+
+    def rho_of(a: float) -> float:
+        W = np.eye(m) - a * L
+        E = q * (W @ W) + (1 - q) * np.eye(m)
+        return float(np.max(np.abs(npl.eigvalsh(E - J))))
+
+    # golden-section over a in (0, 2/lam_max)
+    lo, hi = 0.0, 2.0 / float(lam[-1])
+    invphi = (np.sqrt(5.0) - 1.0) / 2.0
+    a, b = lo, hi
+    c = b - invphi * (b - a)
+    d = a + invphi * (b - a)
+    fc, fd = rho_of(c), rho_of(d)
+    for _ in range(200):
+        if abs(b - a) < 1e-12:
+            break
+        if fc < fd:
+            b, d, fd = d, c, fc
+            c = b - invphi * (b - a)
+            fc = rho_of(c)
+        else:
+            a, c, fc = c, d, fd
+            d = a + invphi * (b - a)
+            fd = rho_of(d)
+    alpha = 0.5 * (a + b)
+    perms = np.stack([matching_permutation(sg) for sg in matchings])
+    plan = MatchaPlan(
+        graph=graph,
+        matchings=tuple(matchings),
+        permutations=perms,
+        probabilities=np.full(len(matchings), q),
+        alpha=float(alpha),
+        rho=rho_of(float(alpha)),
+        lambda2=float(lam[1]) * q,
+        comm_budget=comm_budget,
+    )
+    return plan, periodic_schedule(matchings, comm_budget, 1)

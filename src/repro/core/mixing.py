@@ -1,0 +1,55 @@
+"""Mixing matrices W^(k) = I - alpha * L^(k) (paper eq. 5).
+
+Symmetric and doubly stochastic by construction (row sums: L 1 = 0).
+Provides both the per-iteration dense matrices (reference semantics and
+the small-scale simulator) and static vanilla-DecenSGD matrices with
+the classical equal-weight rule.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.graphs import Graph
+from repro.core.topology import TopologySchedule
+
+
+def mixing_matrix(laplacian: np.ndarray, alpha: float) -> np.ndarray:
+    m = laplacian.shape[0]
+    return np.eye(m) - alpha * laplacian
+
+
+def schedule_mixing_matrix(
+    schedule: TopologySchedule, k: int, alpha: float
+) -> np.ndarray:
+    return mixing_matrix(schedule.laplacian(k), alpha)
+
+
+def vanilla_equal_weight_matrix(graph: Graph) -> np.ndarray:
+    """W = I - L / (Delta + 1): the standard equal-neighbor-weight gossip
+    matrix for static DecenSGD (guaranteed doubly stochastic, PSD-safe)."""
+    return mixing_matrix(graph.laplacian(), 1.0 / (graph.max_degree() + 1))
+
+
+def check_doubly_stochastic(W: np.ndarray, atol: float = 1e-9) -> bool:
+    m = W.shape[0]
+    ones = np.ones(m)
+    return (
+        np.allclose(W, W.T, atol=atol)
+        and np.allclose(W @ ones, ones, atol=atol)
+        and np.allclose(ones @ W, ones, atol=atol)
+    )
+
+
+def empirical_rho(
+    Ws: Sequence[np.ndarray],
+) -> float:
+    """Monte-Carlo estimate of rho = || E[W'W] - J ||_2 from samples."""
+    m = Ws[0].shape[0]
+    acc = np.zeros((m, m))
+    for W in Ws:
+        acc += W.T @ W
+    acc /= len(Ws)
+    J = np.full((m, m), 1.0 / m)
+    return float(np.max(np.abs(np.linalg.eigvalsh(acc - J))))

@@ -1,0 +1,68 @@
+"""Fused gossip-consensus update Pallas TPU kernel.
+
+The MATCHA consensus step on a matched node is, per parameter shard,
+
+    x <- x + alpha * (partner - x)          (W = I - alpha L on an edge)
+
+After the `ppermute` delivers ``partner`` the update is pure elementwise
+math over multi-GB parameter shards — memory-bound. Fusing the
+subtract/scale/add into one VMEM pass (instead of three XLA ops with
+intermediate HBM round trips when the fusion heuristic misses) keeps the
+traffic at the 2-read/1-write floor. alpha is a compile-time constant:
+MATCHA computes it once, before training (paper Lemma 1).
+
+Blocks: flattened (rows, 1024)-tiles, 8x128-aligned, fp32 accumulate.
+
+TARGET: TPU. Validated on CPU via interpret=True against
+``repro.kernels.ref.gossip_axpy_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 1024          # 8 sublanes x 128 lanes per block row
+BLOCK_ROWS = 256     # 256 x 1024 x 4B x 3 buffers = 3 MB VMEM working set
+
+
+def _axpy_kernel(x_ref, y_ref, o_ref, *, alpha: float):
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    o_ref[...] = (x + alpha * (y - x)).astype(o_ref.dtype)
+
+
+def gossip_axpy(
+    x: jax.Array, y: jax.Array, alpha: float, *, interpret: bool = True
+) -> jax.Array:
+    """Elementwise consensus update over arbitrary-shaped params."""
+    if x.shape != y.shape:
+        raise ValueError("operand shapes must match")
+    shape = x.shape
+    n = x.size
+    # pad to a (rows, LANE) grid
+    rows = -(-n // LANE)
+    pad = rows * LANE - n
+    xf = jnp.pad(x.reshape(-1), (0, pad)).reshape(rows, LANE)
+    yf = jnp.pad(y.reshape(-1), (0, pad)).reshape(rows, LANE)
+    block_rows = min(BLOCK_ROWS, rows)
+    grid_rows = -(-rows // block_rows)
+    if rows % block_rows:
+        extra = grid_rows * block_rows - rows
+        xf = jnp.pad(xf, ((0, extra), (0, 0)))
+        yf = jnp.pad(yf, ((0, extra), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_axpy_kernel, alpha=float(alpha)),
+        grid=(grid_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        interpret=interpret,
+    )(xf, yf)
+    return out.reshape(-1)[:n].reshape(shape)

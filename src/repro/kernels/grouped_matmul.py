@@ -1,0 +1,110 @@
+"""Grouped (ragged) matmul Pallas TPU kernel — megablox-lite.
+
+The MoE expert compute: rows of ``x`` (sorted by expert) hit their
+group's weight matrix:
+
+    out[r] = x[r] @ w[g(r)]      g(r) from cumulative group_sizes
+
+Grid: (row_blocks, col_blocks, G) with the group axis innermost
+(sequential on TPU). Each step loads ONE expert's (K, bn) weight block
+— VMEM footprint is K*(bm+bn)*4B ≈ 1-4 MB regardless of the expert
+count — and accumulates the masked contribution of rows in this block
+that belong to the group. Blocks a group does not intersect are skipped
+with pl.when (zero compute, the weight prefetch is the only cost).
+Group offsets arrive via scalar prefetch (SMEM).
+
+All matmul dims are MXU-aligned (bm = bn = 128 defaults).
+
+TARGET: TPU. Validated on CPU via interpret=True against
+``repro.kernels.ref.grouped_matmul_ref`` (= lax.ragged_dot).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(
+    offsets_ref,                 # SMEM (G+1,) int32 — scalar prefetch
+    x_ref, w_ref, o_ref,
+    acc_ref,                     # VMEM scratch (bm, bn) f32
+    *,
+    block_m: int,
+    num_groups: int,
+):
+    im = pl.program_id(0)
+    g = pl.program_id(2)
+
+    @pl.when(g == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    row0 = im * block_m
+    start = offsets_ref[g]
+    end = offsets_ref[g + 1]
+    # does group g intersect this row block?
+    live = jnp.logical_and(start < row0 + block_m, end > row0)
+
+    @pl.when(live)
+    def _accumulate():
+        rows = row0 + jax.lax.broadcasted_iota(
+            jnp.int32, (block_m, 1), 0
+        )
+        hit = jnp.logical_and(rows >= start, rows < end)     # (bm, 1)
+        x = jnp.where(hit, x_ref[...].astype(jnp.float32), 0.0)
+        w = w_ref[0].astype(jnp.float32)                     # (K, bn)
+        acc_ref[...] += jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(g == num_groups - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def grouped_matmul(
+    x: jax.Array,                # (M, K) rows sorted by group
+    w: jax.Array,                # (G, K, N)
+    group_sizes: jax.Array,      # (G,) int32
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    M, K = x.shape
+    G, _, N = w.shape
+    bm = min(block_m, M)
+    bn = min(block_n, N)
+    pad_m = (-M) % bm
+    pad_n = (-N) % bn
+    xp = jnp.pad(x, ((0, pad_m), (0, 0))) if pad_m else x
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, pad_n))) if pad_n else w
+    Mp, Np = xp.shape[0], wp.shape[2]
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(group_sizes).astype(jnp.int32)]
+    )
+
+    kernel = functools.partial(_gmm_kernel, block_m=bm, num_groups=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Mp // bm, Np // bn, G),
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda im, jn, g, offs: (im, 0)),
+            pl.BlockSpec((1, K, bn), lambda im, jn, g, offs: (g, 0, jn)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda im, jn, g, offs: (im, jn)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        interpret=interpret,
+    )(offsets, xp, wp)
+    return out[:M, :N]

@@ -1,0 +1,113 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: on TPU backends the Pallas kernels run compiled; on CPU
+(this container) they run in interpret mode for correctness tests, and
+the model code uses the jnp reference paths for anything that must
+*lower* on CPU (the multi-pod dry-run). ``impl="auto"`` resolves that
+choice per backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gossip_axpy as _ga
+from repro.kernels import grouped_matmul as _gm
+from repro.kernels import ssm_scan as _ss
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if _on_tpu() else "xla"
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "impl", "block_q", "block_k")
+)
+def attention(
+    q, k, v, *, causal: bool = True, window: int = 0,
+    impl: str = "auto", block_q: int = 128, block_k: int = 128,
+):
+    mode = _resolve(impl)
+    if mode == "xla":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window)
+    interpret = mode == "interpret" or not _on_tpu()
+    Sq, Sk = q.shape[1], k.shape[1]
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    if pad_q or pad_k:
+        # pad keys as masked-out future positions; pad queries then slice
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    out = _fa.flash_attention(
+        q, k, v, causal=causal, window=window,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    return out[:, :Sq] if pad_q else out
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd(
+    x, dt, A, B_mat, C_mat, *, chunk: int = 128, impl: str = "auto"
+):
+    mode = _resolve(impl)
+    if mode == "xla":
+        return _ref.ssm_scan_ref(x, dt, A, B_mat, C_mat)
+    interpret = mode == "interpret" or not _on_tpu()
+    S = x.shape[1]
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    return _ss.ssm_scan(x, dt, A, B_mat, C_mat, chunk=c, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Gossip consensus update
+# ---------------------------------------------------------------------------
+def gossip_update(x_tree, partner_tree, alpha: float, *, impl: str = "auto"):
+    """Tree-wide fused consensus update x + alpha (partner - x)."""
+    mode = _resolve(impl)
+    if mode == "xla":
+        return jax.tree.map(
+            lambda a, b: _ref.gossip_axpy_ref(a, b, alpha), x_tree, partner_tree
+        )
+    interpret = mode == "interpret" or not _on_tpu()
+    return jax.tree.map(
+        lambda a, b: _ga.gossip_axpy(a, b, alpha, interpret=interpret),
+        x_tree,
+        partner_tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Grouped matmul (MoE expert compute, megablox-lite)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("impl", "block_m", "block_n"))
+def grouped_matmul(x, w, group_sizes, *, impl: str = "auto",
+                   block_m: int = 128, block_n: int = 128):
+    mode = _resolve(impl)
+    if mode == "xla":
+        return _ref.grouped_matmul_ref(x, w, group_sizes)
+    interpret = mode == "interpret" or not _on_tpu()
+    return _gm.grouped_matmul(
+        x, w, group_sizes, block_m=block_m, block_n=block_n,
+        interpret=interpret,
+    )

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel's tests sweep shapes/dtypes and assert allclose against the
+functions here; the model code paths also reuse these as their XLA
+fallback implementations.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -2.0**30
+
+
+def attention_ref(
+    q: jax.Array,            # (B, Sq, Hq, hd)
+    k: jax.Array,            # (B, Sk, Hkv, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qf = q.astype(jnp.float32) / np.sqrt(hd)
+    qg = qf.reshape(B, Sq, Hkv, g, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+def ssm_scan_ref(
+    x: jax.Array,            # (B, S, H, P)
+    dt: jax.Array,           # (B, S, H), positive
+    A: jax.Array,            # (H,), negative
+    B_mat: jax.Array,        # (B, S, N)
+    C_mat: jax.Array,        # (B, S, N)
+    *,
+    h0: Optional[jax.Array] = None,
+):
+    """Exact sequential SSD recurrence; returns (y, final_state)."""
+    from repro.models.ssm import ssd_sequential
+
+    return ssd_sequential(x, dt, A, B_mat, C_mat, h0=h0, return_final_state=True)
+
+
+def gossip_axpy_ref(x: jax.Array, y: jax.Array, alpha: float) -> jax.Array:
+    """Consensus update on matched nodes: x + alpha * (y - x) in fp32."""
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    return (xf + alpha * (yf - xf)).astype(x.dtype)
+
+
+def grouped_matmul_ref(
+    x: jax.Array,            # (T, D) rows sorted by group
+    w: jax.Array,            # (G, D, F)
+    group_sizes: jax.Array,  # (G,) int32, sums to T
+) -> jax.Array:
+    """Oracle for the MoE grouped matmul (megablox-lite)."""
+    return jax.lax.ragged_dot(x, w, group_sizes)

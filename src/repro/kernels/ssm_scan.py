@@ -1,0 +1,130 @@
+"""Mamba2 SSD chunk-scan Pallas TPU kernel.
+
+Processes the selective-state-space recurrence chunk by chunk. Grid is
+(batch, heads, num_chunks); TPU iterates the last grid axis sequentially,
+so the (N, P) state lives in VMEM scratch and flows from chunk c to
+chunk c+1 without touching HBM — the recurrent dependency never leaves
+the core. Per chunk:
+
+    intra:  y_i += sum_{j<=i} (C_i.B_j) exp(La_i - La_j) dt_j x_j
+    inter:  y_i += exp(La_i) * (C_i . h_in)
+    state:  h_out = exp(La_Q) h_in + sum_j exp(La_Q - La_j) dt_j B_j (x) x_j
+
+Block shapes: x (chunk, P), B/C (chunk, N), dt (chunk, 1) — with
+chunk=128, P=64..128, N=128 the working set is ~0.4 MB fp32, VMEM-safe.
+The (chunk, chunk) intra-chunk matrix and both matmuls are MXU-shaped.
+
+TARGET: TPU. Validated on CPU via interpret=True against
+``repro.kernels.ref.ssm_scan_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref,     # blocks (see grid spec)
+    y_ref, hout_ref,
+    h_scratch,                              # (N, P) f32 carried state
+    *,
+    chunk: int,
+    num_chunks: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)       # (Q,)
+    a = a_ref[0].astype(jnp.float32)                # scalar A_h
+    bm = b_ref[0].astype(jnp.float32)               # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)               # (Q, N)
+
+    loga = dt * a                                   # (Q,) <= 0
+    cum = jnp.cumsum(loga)                          # (Q,)
+
+    # intra-chunk
+    cb = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # (Q, Q)
+    diff = cum[:, None] - cum[None, :]
+    mask = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    decay = jnp.where(mask, jnp.exp(diff), 0.0)
+    m = cb * decay * dt[None, :]                    # (Q, Q)
+    y = jax.lax.dot_general(
+        m, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # (Q, P)
+
+    # inter-chunk using incoming state
+    h_in = h_scratch[...]                           # (N, P)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cm, h_in, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # state update
+    tail = jnp.exp(cum[-1] - cum) * dt              # (Q,)
+    contrib = jax.lax.dot_general(
+        bm * tail[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                               # (N, P)
+    h_new = jnp.exp(cum[-1]) * h_in + contrib
+    h_scratch[...] = h_new
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == num_chunks - 1)
+    def _emit_state():
+        hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+
+
+def ssm_scan(
+    x: jax.Array,        # (B, S, H, P)
+    dt: jax.Array,       # (B, S, H)
+    A: jax.Array,        # (H,)
+    B_mat: jax.Array,    # (B, S, N)
+    C_mat: jax.Array,    # (B, S, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = True,
+):
+    """Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    B, S, H, P = x.shape
+    N = B_mat.shape[-1]
+    chunk = min(chunk, S)
+    if S % chunk:
+        raise ValueError("S must divide chunk (pad in ops)")
+    nc = S // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, num_chunks=nc)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B_mat, C_mat)
+    return y, hout

@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Functions, not module constants: importing this module never touches
+jax device state. The dry-run launcher sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import; smoke tests and benches see the real (single) device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, nodes: int = 4, model: int = 2, multi_pod: bool = False):
+    """Small CPU mesh for multi-device unit tests (host device count
+    must already be >= nodes*model via XLA_FLAGS)."""
+    if multi_pod:
+        return jax.make_mesh((2, nodes // 2, model), ("pod", "data", "model"))
+    return jax.make_mesh((nodes, model), ("data", "model"))
+
+
+def num_nodes(mesh, *, multi_pod: bool) -> int:
+    n = mesh.shape["data"]
+    if multi_pod:
+        n *= mesh.shape["pod"]
+    return n

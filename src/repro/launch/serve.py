@@ -1,0 +1,99 @@
+"""Serving driver: prefill a batch of prompts, decode N tokens.
+
+CPU-friendly demonstration of the serving runtime (the same step
+functions the dry-run lowers at production shapes):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2_1_8b \
+      --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2_1_8b")
+    ap.add_argument("--preset", default="tiny", choices=("tiny", "full"))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--data-par", type=int, default=1)
+    ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        f"--xla_force_host_platform_device_count={args.data_par * args.model_par}",
+    )
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.registry import get_config, get_smoke_config
+    from repro.data.pipeline import SyntheticCorpus
+    from repro.dist import serve as sv
+    from repro.dist import sharding as shd
+    from repro.models.transformer import Model
+
+    cfg = (
+        get_smoke_config(args.arch) if args.preset == "tiny"
+        else get_config(args.arch)
+    )
+    model = Model(cfg)
+    mesh = jax.make_mesh((args.data_par, args.model_par), ("data", "model"))
+    rules = shd.serve_rules(mesh, cfg)
+    if args.batch % args.data_par:
+        raise SystemExit("batch must divide data_par")
+
+    max_len = args.prompt_len + args.gen
+    params = model.init(jax.random.key(args.seed))
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    prompts = np.stack(
+        [corpus.sample(rng, args.prompt_len) for _ in range(args.batch)]
+    ).astype(np.int32)
+
+    prefill = jax.jit(sv.make_prefill_step(model, rules, max_len=max_len))
+    decode = jax.jit(sv.make_decode_step(model, rules, max_len=max_len))
+
+    with jax.set_mesh(mesh):
+        caches = model.init_cache(args.batch, max_len)
+        t0 = time.time()
+        kwargs = {}
+        if cfg.frontend == "audio":
+            kwargs["encoder_frames"] = jnp.zeros(
+                (args.batch, cfg.encoder_seq, cfg.frontend_dim or cfg.d_model),
+                jnp.bfloat16,
+            )
+        logits, caches = prefill(
+            params, jnp.asarray(prompts), caches, **kwargs
+        )
+        jax.block_until_ready(logits)
+        t_prefill = time.time() - t0
+
+        out_tokens = [jnp.argmax(logits[:, -1, :], axis=-1)]
+        t0 = time.time()
+        for i in range(args.gen - 1):
+            tok = out_tokens[-1][:, None].astype(jnp.int32)
+            logits, caches = decode(
+                params, tok, caches, jnp.int32(args.prompt_len + i)
+            )
+            out_tokens.append(jnp.argmax(logits[:, -1, :], axis=-1))
+        jax.block_until_ready(out_tokens[-1])
+        t_decode = time.time() - t0
+
+    gen = np.stack([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen}")
+    print(f"prefill: {t_prefill*1e3:.1f} ms   decode: "
+          f"{t_decode/max(args.gen-1,1)*1e3:.1f} ms/token")
+    print("generated token ids (first request):", gen[0][:16], "...")
+    assert np.isfinite(gen).all()
+
+
+if __name__ == "__main__":
+    main()

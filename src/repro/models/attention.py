@@ -1,0 +1,287 @@
+"""Attention blocks: GQA/MQA, causal, sliding-window, cross, and decode.
+
+Two execution paths share one declaration:
+  * ``xla``    — pure jnp einsum attention (used for tests and for the
+                 multi-pod dry-run lowering; XLA fuses it fine on TPU too);
+  * ``pallas`` — the flash-attention kernel in ``repro.kernels`` (TPU fast
+                 path; validated against the jnp oracle in interpret mode).
+
+Decode uses an explicit-position KV cache: positions are stored next to
+k/v so full caches and ring-buffer (sliding-window) caches share one code
+path — a local layer's cache is just a cache whose length equals the
+window, written round-robin.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+from repro.models.layers import apply_dense, apply_rope, declare_dense
+from repro.models.module import ParamBuilder
+
+NEG_INF = -2.0**30  # large-but-finite: keeps masked softmax NaN-free
+
+
+# ---------------------------------------------------------------------------
+# Declarations
+# ---------------------------------------------------------------------------
+def declare_attention(
+    b: ParamBuilder, path: str, cfg: ModelConfig, *, cross: bool = False
+) -> None:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    # Axis roles (resolved per-arch by dist.sharding.rules_for_config):
+    #   heads_proj: column-shard q/o projections when heads % tp == 0
+    #   kv_proj:    column-shard k/v projections when kv_heads % tp == 0
+    #   q_in/kv_in: row-shard fallback when head counts don't divide tp
+    declare_dense(b, f"{path}.wq", d, h * hd, ("q_in", "heads_proj"))
+    declare_dense(b, f"{path}.wk", d, kv * hd, ("kv_in", "kv_proj"))
+    declare_dense(b, f"{path}.wv", d, kv * hd, ("kv_in", "kv_proj"))
+    declare_dense(b, f"{path}.wo", h * hd, d, ("heads_proj", None))
+    if cfg.qk_norm:
+        b.declare(f"{path}.q_norm.scale", (hd,), (None,),
+                  init=lambda k, s, dt: jnp.ones(s, dt))
+        b.declare(f"{path}.k_norm.scale", (hd,), (None,),
+                  init=lambda k, s, dt: jnp.ones(s, dt))
+    del cross  # same parameter structure; kv source differs at apply time
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _rms(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    stat = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return x * stat.astype(x.dtype) * scale.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Core scaled-dot-product (jnp path)
+# ---------------------------------------------------------------------------
+def sdpa(
+    q: jax.Array,              # (B, Sq, Hq, hd)
+    k: jax.Array,              # (B, Sk, Hkv, hd)
+    v: jax.Array,              # (B, Sk, Hkv, hd)
+    *,
+    q_positions: jax.Array,    # (B, Sq) int32
+    k_positions: jax.Array,    # (B, Sk) int32; -1 marks invalid cache slots
+    causal: bool,
+    window: int = 0,           # 0: unlimited
+    logit_softcap: float = 0.0,
+) -> jax.Array:
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qf = q.astype(jnp.float32) / np.sqrt(hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(B, Sq, Hkv, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, kf)  # (B,Hkv,g,Sq,Sk)
+    if logit_softcap:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+    mask = k_positions[:, None, None, None, :] >= 0
+    if causal:
+        mask &= (
+            k_positions[:, None, None, None, :]
+            <= q_positions[:, None, None, :, None]
+        )
+    if window:
+        mask &= (
+            q_positions[:, None, None, :, None]
+            - k_positions[:, None, None, None, :]
+            < window
+        )
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, vf)
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+def sdpa_chunked(
+    q: jax.Array,              # (B, Sq, Hq, hd)
+    k: jax.Array,              # (B, Sk, Hkv, hd)
+    v: jax.Array,
+    *,
+    q_positions: jax.Array,
+    k_positions: jax.Array,
+    causal: bool,
+    window: int = 0,
+    logit_softcap: float = 0.0,
+    block_q: int = 512,
+) -> jax.Array:
+    """Flash-style attention in pure XLA: lax.scan over query blocks with
+    full-precision softmax per block. Peak temp is O(block_q * Sk) per
+    head instead of O(Sq * Sk) — this is the path long-sequence shapes
+    lower through on the dry-run (the Pallas kernel is the TPU runtime
+    equivalent; XLA:TPU also fuses this scan into a flash-like loop).
+    """
+    B, Sq, Hq, hd = q.shape
+    bq = min(block_q, Sq)
+    while Sq % bq:
+        bq //= 2
+    nq = Sq // bq
+
+    qb = q.reshape(B, nq, bq, Hq, hd).swapaxes(0, 1)            # (nq,B,bq,H,hd)
+    qpb = q_positions.reshape(B, nq, bq).swapaxes(0, 1)          # (nq,B,bq)
+
+    def block(_, inp):
+        qi, qpi = inp
+        out = sdpa(
+            qi, k, v,
+            q_positions=qpi, k_positions=k_positions,
+            causal=causal, window=window, logit_softcap=logit_softcap,
+        )
+        return None, out
+
+    if CHUNK_LOOP_MODE == "unroll":
+        # Dry-run counts mode: XLA's cost analysis counts a while-loop
+        # body once, so the roofline lowering unrolls the q-block loop.
+        outs = [block(None, (qb[i], qpb[i]))[1] for i in range(nq)]
+        outs = jnp.stack(outs, axis=0)
+    else:
+        _, outs = jax.lax.scan(block, None, (qb, qpb))
+    return outs.swapaxes(0, 1).reshape(B, Sq, Hq, hd)
+
+
+# Sequence length at and above which the chunked path is used.
+# train_4k (S=4096) stays on the plain einsum path: exact op counts and
+# a per-chip score temp of only ~1-2 GB; 32k+ shapes go chunked.
+CHUNKED_SDPA_THRESHOLD = 8192
+
+# "scan" (runtime) | "unroll" (dry-run counts mode)
+CHUNK_LOOP_MODE = "scan"
+
+
+def _dispatch_sdpa(q, k, v, **kw):
+    if q.shape[1] >= CHUNKED_SDPA_THRESHOLD:
+        return sdpa_chunked(q, k, v, **kw)
+    return sdpa(q, k, v, **kw)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    length: int        # slots (full seq or sliding window)
+    ring: bool         # round-robin writes (window caches)
+
+
+def init_kv_cache(
+    batch: int, spec: CacheSpec, kv_heads: int, head_dim: int, dtype
+) -> dict:
+    return {
+        "k": jnp.zeros((batch, spec.length, kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, spec.length, kv_heads, head_dim), dtype),
+        # explicit absolute positions; -1 = empty slot
+        "pos": jnp.full((batch, spec.length), -1, jnp.int32),
+    }
+
+
+def cache_write(
+    cache: dict, k_new: jax.Array, v_new: jax.Array,
+    positions: jax.Array, spec: CacheSpec,
+) -> dict:
+    """Write Sq new entries at ``positions`` (B, Sq). Ring caches wrap."""
+    B, Sq = positions.shape
+    idx = positions % spec.length if spec.ring else positions
+    bidx = jnp.arange(B, dtype=jnp.int32)[:, None].repeat(Sq, axis=1)
+    k = cache["k"].at[bidx, idx].set(k_new.astype(cache["k"].dtype))
+    v = cache["v"].at[bidx, idx].set(v_new.astype(cache["v"].dtype))
+    pos = cache["pos"].at[bidx, idx].set(positions.astype(jnp.int32))
+    return {"k": k, "v": v, "pos": pos}
+
+
+# ---------------------------------------------------------------------------
+# Full attention block
+# ---------------------------------------------------------------------------
+def attention_block(
+    p: dict,
+    x: jax.Array,                       # (B, Sq, D)
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,               # (B, Sq)
+    causal: bool = True,
+    window: int = 0,
+    cache: Optional[dict] = None,       # decode/prefill KV cache
+    cache_spec: Optional[CacheSpec] = None,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,  # encoder K/V
+    use_rope: bool = True,
+) -> Tuple[jax.Array, Optional[dict]]:
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    q = _split_heads(apply_dense(p["wq"], x, dtype), h, hd)
+    q = shard(q, ("batch", "seq", "heads", None))
+    if cfg.qk_norm:
+        q = _rms(q, p["q_norm"]["scale"])
+
+    if cross_kv is not None:
+        k_all, v_all = cross_kv
+        Sk = k_all.shape[1]
+        k_pos = jnp.broadcast_to(
+            jnp.arange(Sk, dtype=jnp.int32)[None, :], (x.shape[0], Sk)
+        )
+        out = _dispatch_sdpa(
+            q, k_all, v_all,
+            q_positions=positions, k_positions=k_pos,
+            causal=False, window=0, logit_softcap=cfg.logit_softcap,
+        )
+        y = apply_dense(p["wo"], out.reshape(*x.shape[:-1], h * hd), dtype)
+        return shard(y, ("batch", "seq", "embed")), None
+
+    k_new = _split_heads(apply_dense(p["wk"], x, dtype), kv, hd)
+    v_new = _split_heads(apply_dense(p["wv"], x, dtype), kv, hd)
+    if cfg.qk_norm:
+        k_new = _rms(k_new, p["k_norm"]["scale"])
+    if use_rope and cfg.pos_embed == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+
+    if cache is None:
+        out = _dispatch_sdpa(
+            q, k_new, v_new,
+            q_positions=positions, k_positions=positions,
+            causal=causal, window=window, logit_softcap=cfg.logit_softcap,
+        )
+        new_cache = None
+    else:
+        assert cache_spec is not None
+        new_cache = cache_write(cache, k_new, v_new, positions, cache_spec)
+        if cache_spec.ring and q.shape[1] > 1:
+            # Windowed-prefill: a ring cache shorter than the chunk has
+            # already overwritten the oldest keys, but every query's
+            # window lies inside the in-flight chunk (prefill starts at
+            # position 0), so attend over k_new/v_new directly. The
+            # cache write above still leaves the last ``window`` keys
+            # ready for subsequent decode steps.
+            out = _dispatch_sdpa(
+                q, k_new, v_new,
+                q_positions=positions, k_positions=positions,
+                causal=causal, window=window, logit_softcap=cfg.logit_softcap,
+            )
+        else:
+            k_all = shard(new_cache["k"], ("batch", "kv_seq", "kv_heads", None))
+            v_all = shard(new_cache["v"], ("batch", "kv_seq", "kv_heads", None))
+            out = _dispatch_sdpa(
+                q, k_all, v_all,
+                q_positions=positions, k_positions=new_cache["pos"],
+                causal=causal, window=window, logit_softcap=cfg.logit_softcap,
+            )
+    y = apply_dense(p["wo"], out.reshape(*x.shape[:-1], h * hd), dtype)
+    return shard(y, ("batch", "seq", "embed")), new_cache
+
+
+def encoder_kv(p: dict, enc_out: jax.Array, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output (whisper serve)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    k = _split_heads(apply_dense(p["wk"], enc_out, dtype), kv, hd)
+    v = _split_heads(apply_dense(p["wv"], enc_out, dtype), kv, hd)
+    return k, v

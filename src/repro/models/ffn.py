@@ -1,0 +1,195 @@
+"""Feed-forward blocks: dense (gated / plain) and Mixture-of-Experts.
+
+MoE has two interchangeable execution paths:
+
+  * ``einsum`` — every expert on every token, masked combine. O(T*E*F)
+    compute; exact. Used as the small-scale oracle in tests.
+  * ``ragged`` — sort-by-expert + ``jax.lax.ragged_dot`` grouped matmul
+    (megablox-style). O(T*k*F) compute, production path used for the
+    multi-pod dry-run lowering. The Pallas grouped-matmul kernel in
+    ``repro.kernels`` mirrors this path on TPU.
+
+Aux losses follow standard practice (switch-style load-balance + router
+z-loss) and are returned to the training loss unreduced.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+from repro.models.layers import activation_fn, apply_dense, declare_dense
+from repro.models.module import ParamBuilder, lecun_normal
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+def declare_ffn(
+    b: ParamBuilder, path: str, d_model: int, d_ff: int, gated: bool
+) -> None:
+    declare_dense(b, f"{path}.w1", d_model, d_ff, (None, "ffn"))
+    if gated:
+        declare_dense(b, f"{path}.w3", d_model, d_ff, (None, "ffn"))
+    declare_dense(b, f"{path}.w2", d_ff, d_model, ("ffn", None))
+
+
+def ffn_block(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dtype = jnp.dtype(cfg.compute_dtype)
+    act = activation_fn(cfg.ffn_activation)
+    h = act(apply_dense(p["w1"], x, dtype))
+    if "w3" in p:
+        h = h * apply_dense(p["w3"], x, dtype)
+    h = shard(h, ("batch", "seq", "ffn"))
+    y = apply_dense(p["w2"], h, dtype)
+    return shard(y, ("batch", "seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+def declare_moe(b: ParamBuilder, path: str, cfg: ModelConfig) -> None:
+    d, e = cfg.d_model, cfg.moe_num_experts
+    f = cfg.moe_d_ff or cfg.d_ff
+    declare_dense(b, f"{path}.router", d, e, (None, None))
+    b.declare(f"{path}.w1", (e, d, f), ("experts", None, "ffn"), init=_expert_init)
+    if cfg.gated_ffn:
+        b.declare(f"{path}.w3", (e, d, f), ("experts", None, "ffn"), init=_expert_init)
+    b.declare(f"{path}.w2", (e, f, d), ("experts", "ffn", None), init=_expert_init)
+    if cfg.moe_shared_expert:
+        declare_ffn(b, f"{path}.shared", d, f, cfg.gated_ffn)
+
+
+def _expert_init(key, shape, dtype):
+    # fan_in is the middle dim (per-expert matrices stacked on dim 0)
+    import numpy as np
+
+    std = 1.0 / np.sqrt(shape[1])
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def _router(p, x2d: jax.Array, cfg: ModelConfig):
+    """Top-k routing. Returns (gates (T,k), idx (T,k), aux dict)."""
+    logits = (x2d.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    top_vals, top_idx = jax.lax.top_k(logits, cfg.moe_top_k)   # (T, k)
+    gates = jax.nn.softmax(top_vals, axis=-1)                  # renormalize
+    # switch-style load balance: E * sum_e fraction_e * prob_e
+    E = cfg.moe_num_experts
+    onehot = jax.nn.one_hot(top_idx, E, dtype=jnp.float32)     # (T, k, E)
+    frac = onehot.sum(axis=1).mean(axis=0)                     # tokens per e
+    lb = E * jnp.sum(frac * probs.mean(axis=0))
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return gates, top_idx, {"load_balance": lb, "router_z": z}
+
+
+def _moe_einsum(p, x2d, gates, idx, cfg: ModelConfig):
+    """Oracle path: compute all experts, masked combine. (T,E,F) memory."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    act = activation_fn(cfg.ffn_activation)
+    w1 = p["w1"].astype(dtype)
+    w2 = p["w2"].astype(dtype)
+    h = jnp.einsum("td,edf->tef", x2d.astype(dtype), w1)
+    h = act(h)
+    if "w3" in p:
+        h = h * jnp.einsum("td,edf->tef", x2d.astype(dtype), p["w3"].astype(dtype))
+    y_all = jnp.einsum("tef,efd->ted", h, w2)                  # (T, E, D)
+    E = cfg.moe_num_experts
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)         # (T,k,E)
+    weights = (gates[..., None] * onehot).sum(axis=1)          # (T,E)
+    return jnp.einsum("ted,te->td", y_all.astype(jnp.float32), weights).astype(dtype)
+
+
+# Dry-run counts mode flag. XLA's REFERENCE lowering of lax.ragged_dot is
+# a dense masked dot over ALL experts — O(P*E*D*F) — which would inflate
+# the roofline compute term by E/k (48x on kimi-k2). On TPU the megablox
+# grouped-matmul kernel does O(P*D*F) work and reads each expert's
+# weights once. The counts surrogate reproduces exactly that cost:
+# one (P,D)x(D,F) matmul (flops) over the mean of the expert weights
+# (reads all E*D*F weight bytes once).
+GROUPED_DOT_COUNTS_SURROGATE = False
+
+
+def _grouped_dot(xs, w, group_sizes):
+    if GROUPED_DOT_COUNTS_SURROGATE:
+        return xs @ jnp.mean(w, axis=0)
+    return jax.lax.ragged_dot(xs, w, group_sizes)
+
+
+def _moe_ragged(p, x2d, gates, idx, cfg: ModelConfig):
+    """Production path: sort token-expert pairs, grouped matmul."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    act = activation_fn(cfg.ffn_activation)
+    T, D = x2d.shape
+    k = cfg.moe_top_k
+    E = cfg.moe_num_experts
+    flat_e = idx.reshape(-1)                                   # (P,) P = T*k
+    order = jnp.argsort(flat_e)                                # stable
+    tok = order // k                                           # token per pair
+    xs = jnp.take(x2d, tok, axis=0).astype(dtype)              # (P, D)
+    group_sizes = jnp.bincount(flat_e, length=E).astype(jnp.int32)
+    h = _grouped_dot(xs, p["w1"].astype(dtype), group_sizes)
+    h = act(h)
+    if "w3" in p:
+        h = h * _grouped_dot(xs, p["w3"].astype(dtype), group_sizes)
+    y = _grouped_dot(h, p["w2"].astype(dtype), group_sizes)    # (P, D)
+    g = jnp.take(gates.reshape(-1), order)                     # (P,)
+    out = jnp.zeros((T, D), jnp.float32).at[tok].add(
+        y.astype(jnp.float32) * g[:, None]
+    )
+    return out.astype(dtype)
+
+
+def moe_block(
+    p: dict, x: jax.Array, cfg: ModelConfig, *, impl: str = "ragged"
+) -> Tuple[jax.Array, dict]:
+    """x: (B, S, D) -> (y, aux losses).
+
+    ``cfg.moe_token_chunks > 1`` splits the token dim into chunks for the
+    ragged path: the sorted (T*k, F) expert activations are the peak
+    memory transient; chunking divides it by N at identical total
+    compute (a perf-hillclimb knob, see EXPERIMENTS SSPerf).
+    """
+    B, S, D = x.shape
+    if impl == "einsum":
+        x2d = x.reshape(B * S, D)
+        gates, idx, aux = _router(p, x2d, cfg)
+        y = _moe_einsum(p, x2d, gates, idx, cfg).reshape(B, S, D)
+    elif impl == "ragged":
+        # Dispatch PER EXAMPLE (vmap over batch). A flat global argsort
+        # over (B*S*k) token-expert pairs forces GSPMD to gather tokens
+        # across the batch-sharded data axis — measured 384 GiB/step of
+        # all-reduce on dbrx prefill_32k. Sorting within each example
+        # keeps the whole dispatch local to the batch shard.
+        def per_example(xb):                       # (S, D)
+            g, i, aux_b = _router(p, xb, cfg)
+            nchunks = max(1, cfg.moe_token_chunks)
+            if nchunks > 1 and S % nchunks == 0:
+                c = S // nchunks
+                parts = [
+                    _moe_ragged(p, xb[j * c:(j + 1) * c],
+                                g[j * c:(j + 1) * c],
+                                i[j * c:(j + 1) * c], cfg)
+                    for j in range(nchunks)
+                ]
+                yb = jnp.concatenate(parts, axis=0)
+            else:
+                yb = _moe_ragged(p, xb, g, i, cfg)
+            return yb, aux_b
+
+        if GROUPED_DOT_COUNTS_SURROGATE:
+            # counts surrogate is a plain matmul: vmap composes
+            y, aux_b = jax.vmap(per_example)(x)
+        else:
+            # lax.ragged_dot has no shared-rhs vmap rule: map over batch
+            # (one grouped-matmul launch per example, megablox-style)
+            y, aux_b = jax.lax.map(per_example, x)
+        aux = jax.tree.map(jnp.mean, aux_b)
+    else:
+        raise ValueError(f"unknown moe impl {impl!r}")
+    if cfg.moe_shared_expert:
+        y = y + ffn_block(p["shared"], x, cfg)
+    return shard(y, ("batch", "seq", "embed")), aux

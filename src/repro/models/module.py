@@ -1,0 +1,183 @@
+"""Minimal pure-JAX module substrate.
+
+No flax/haiku on the box, and the framework deliberately keeps models as
+plain pytrees-of-arrays + pure functions. The one piece of machinery we
+add is ``ParamBuilder``: every parameter is declared once with its shape,
+dtype, initializer and *logical sharding axes*; the builder can then
+
+  * materialize the parameter pytree from a PRNG key, and
+  * emit a parallel pytree of logical-axis tuples (consumed by
+    ``repro.dist.sharding`` to produce PartitionSpecs),
+
+so parameters and their sharding can never drift apart.
+
+Logical axis vocabulary (mapped to physical mesh axes by the sharding
+rules in dist/sharding.py):
+
+    "embed"    d_model-sized dims                (never sharded by default)
+    "heads"    attention-head dims               (tensor-parallel)
+    "kv_heads" kv-head dims                      (tensor-parallel if divisible)
+    "ffn"      feed-forward hidden dims          (tensor-parallel)
+    "vocab"    vocabulary dims                   (tensor-parallel)
+    "experts"  MoE expert dims                   (expert-parallel)
+    "layers"   scanned-layer stacking dim        (never sharded)
+    None       replicated dim
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+Axes = Tuple[Optional[str], ...]
+
+
+def _fold_path(key: jax.Array, path: str) -> jax.Array:
+    """Deterministic per-parameter key derivation from a string path."""
+    h = np.uint32(2166136261)
+    for ch in path.encode():
+        h = np.uint32((int(h) ^ ch) * 16777619 & 0xFFFFFFFF)
+    return jax.random.fold_in(key, int(h))
+
+
+@dataclasses.dataclass
+class ParamDecl:
+    shape: Tuple[int, ...]
+    dtype: Any
+    init: Callable[[jax.Array, Tuple[int, ...], Any], jax.Array]
+    axes: Axes
+
+
+class ParamBuilder:
+    """Declare parameters once; materialize arrays + logical-axis specs."""
+
+    def __init__(self, param_dtype=jnp.float32):
+        self.decls: Dict[str, ParamDecl] = {}
+        self.param_dtype = param_dtype
+
+    # -- declaration ----------------------------------------------------------
+    def declare(
+        self,
+        path: str,
+        shape: Sequence[int],
+        axes: Axes,
+        init: Optional[Callable] = None,
+        dtype: Any = None,
+    ) -> None:
+        if path in self.decls:
+            raise ValueError(f"duplicate parameter {path!r}")
+        shape = tuple(int(s) for s in shape)
+        if len(axes) != len(shape):
+            raise ValueError(f"{path}: axes {axes} rank != shape {shape} rank")
+        self.decls[path] = ParamDecl(
+            shape=shape,
+            dtype=dtype or self.param_dtype,
+            init=init or lecun_normal,
+            axes=tuple(axes),
+        )
+
+    # -- materialization -------------------------------------------------------
+    def init(self, key: jax.Array) -> PyTree:
+        out: Dict[str, Any] = {}
+        for path, decl in self.decls.items():
+            sub = _fold_path(key, path)
+            _assign(out, path, decl.init(sub, decl.shape, decl.dtype))
+        return out
+
+    def abstract(self) -> PyTree:
+        out: Dict[str, Any] = {}
+        for path, decl in self.decls.items():
+            _assign(out, path, jax.ShapeDtypeStruct(decl.shape, decl.dtype))
+        return out
+
+    def logical_axes(self) -> PyTree:
+        out: Dict[str, Any] = {}
+        for path, decl in self.decls.items():
+            _assign(out, path, decl.axes)
+        return out
+
+    def num_params(self) -> int:
+        return sum(int(np.prod(d.shape)) for d in self.decls.values())
+
+
+def _assign(tree: Dict[str, Any], path: str, value: Any) -> None:
+    keys = path.split(".")
+    node = tree
+    for k in keys[:-1]:
+        node = node.setdefault(k, {})
+        if not isinstance(node, dict):
+            raise ValueError(f"path {path} collides with leaf {k}")
+    if keys[-1] in node:
+        raise ValueError(f"path {path} already assigned")
+    node[keys[-1]] = value
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def lecun_normal(key, shape, dtype):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    if len(shape) >= 2:
+        fan_in = int(np.prod(shape[:-1]))
+    std = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def scaled_normal(scale: float):
+    def init(key, shape, dtype):
+        return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+    return init
+
+
+def zeros_init(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def embedding_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Tree math helpers (used by optimizers and the gossip step)
+# ---------------------------------------------------------------------------
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """alpha * x + y."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_dot(a: PyTree, b: PyTree):
+    parts = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree.reduce(jnp.add, parts)
+
+
+def tree_global_norm(a: PyTree):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_cast(a: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, a)

@@ -1,0 +1,660 @@
+"""Composable transformer assembly for all assigned architecture families.
+
+One ``Model`` class covers: dense decoders (GQA/MQA), MoE decoders,
+pure-SSM (mamba2), hybrid attn+SSM (jamba), local:global attention
+(gemma3), encoder-decoder with stub audio frontend (whisper), and
+decoder with stub vision prefix (internvl2).
+
+Layer stacking: consecutive layers with identical structure form a
+*segment*; every segment's parameters are stacked on a leading dim.
+Segments with >= SCAN_THRESHOLD layers run under ``lax.scan`` (compile
+time stays flat for 96-layer nemotron); short segments unroll. Both use
+the same per-layer code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+from repro.models.attention import (
+    CacheSpec,
+    attention_block,
+    declare_attention,
+    encoder_kv,
+    init_kv_cache,
+)
+from repro.models.ffn import declare_ffn, declare_moe, ffn_block, moe_block
+from repro.models.layers import (
+    apply_dense,
+    apply_norm,
+    declare_dense,
+    declare_embedding,
+    declare_norm,
+    sinusoidal_table,
+    softmax_cross_entropy,
+    unembed,
+)
+from repro.models.module import ParamBuilder, _fold_path, embedding_init
+from repro.models.ssm import declare_mamba, init_mamba_state, mamba_block
+
+SCAN_THRESHOLD = 8
+
+
+# ---------------------------------------------------------------------------
+# Layer segmentation
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str          # attn | local | global | mamba
+    is_moe: bool
+    count: int
+    scanned: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class PeriodicSegment:
+    """A repeating heterogeneous layer pattern scanned over its repeats.
+
+    Hybrid / local:global stacks (jamba: period 8, gemma3: period 6) have
+    no long uniform runs, so plain per-kind scanning degenerates to full
+    unrolling — compile time explodes at 32-96 layers on a 256-way SPMD
+    partition. Instead the pattern itself becomes the scan body: params
+    are stacked per position-in-period with a leading ``reps`` dim.
+    """
+
+    pattern: Tuple[Segment, ...]   # one single-layer Segment per position
+    reps: int
+
+    @property
+    def count(self) -> int:
+        return len(self.pattern) * self.reps
+
+    @property
+    def period(self) -> int:
+        return len(self.pattern)
+
+
+def _plain_segments(cfg: ModelConfig, kinds, moes, scan: bool) -> List[Segment]:
+    segs: List[Segment] = []
+    i = 0
+    while i < len(kinds):
+        kind, moe = kinds[i], moes[i]
+        j = i
+        while j < len(kinds) and kinds[j] == kind and moes[j] == moe:
+            j += 1
+        count = j - i
+        segs.append(Segment(kind, moe, count,
+                            scanned=scan and count >= SCAN_THRESHOLD))
+        i = j
+    return segs
+
+
+def segment_layers(cfg: ModelConfig) -> List:
+    kinds = list(cfg.layer_kinds())
+    moes = [cfg.layer_is_moe(i) for i in range(cfg.num_layers)]
+    plain = _plain_segments(cfg, kinds, moes, cfg.scan_layers)
+    if not cfg.scan_layers:
+        return plain
+    if any(s.scanned for s in plain):
+        return plain
+    # no long uniform run: look for a repeating heterogeneous period
+    pattern = list(zip(kinds, moes))
+    L = len(pattern)
+    for p in range(2, 13):
+        reps = L // p
+        if reps < 2:
+            break
+        if len(set(pattern[:p])) <= 1:
+            # uniform period: plain segmentation already handles it
+            continue
+        if all(pattern[i] == pattern[i % p] for i in range(reps * p)):
+            body = tuple(
+                Segment(kinds[j], moes[j], 1, scanned=False) for j in range(p)
+            )
+            segs: List = [PeriodicSegment(pattern=body, reps=reps)]
+            rem = L - reps * p
+            if rem:
+                segs.extend(
+                    _plain_segments(
+                        cfg, kinds[reps * p:], moes[reps * p:], cfg.scan_layers
+                    )
+                )
+            return segs
+    return plain
+
+
+def _has_ffn(cfg: ModelConfig, seg: Segment) -> bool:
+    return seg.is_moe or (cfg.d_ff > 0 and seg.kind != "mamba") or (
+        cfg.d_ff > 0 and cfg.family == "hybrid"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Declarations
+# ---------------------------------------------------------------------------
+def _declare_layer(
+    b: ParamBuilder, path: str, cfg: ModelConfig, seg: Segment, *, cross: bool
+) -> None:
+    declare_norm(b, f"{path}.norm1", cfg.d_model, cfg.norm)
+    if seg.kind == "mamba":
+        declare_mamba(b, f"{path}.mixer", cfg)
+    else:
+        declare_attention(b, f"{path}.mixer", cfg)
+    if cross:
+        declare_norm(b, f"{path}.norm_cross", cfg.d_model, cfg.norm)
+        declare_attention(b, f"{path}.cross", cfg, cross=True)
+    if _has_ffn(cfg, seg):
+        declare_norm(b, f"{path}.norm2", cfg.d_model, cfg.norm)
+        if seg.is_moe:
+            declare_moe(b, f"{path}.ffn", cfg)
+        else:
+            declare_ffn(b, f"{path}.ffn", cfg.d_model, cfg.d_ff, cfg.gated_ffn)
+
+
+def _stack_builder(
+    cfg: ModelConfig, seg: Segment, *, cross: bool
+) -> ParamBuilder:
+    """Builder for ONE layer of a segment (stacked at materialization)."""
+    b = ParamBuilder(param_dtype=jnp.dtype(cfg.param_dtype))
+    _declare_layer(b, "layer", cfg, seg, cross=cross)
+    return b
+
+
+class Model:
+    """Config-driven transformer. Pure functions + param pytrees."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.segments = segment_layers(cfg)
+        self._enc_segment = (
+            Segment("attn", False, cfg.encoder_layers, cfg.encoder_layers >= SCAN_THRESHOLD)
+            if cfg.encoder_layers
+            else None
+        )
+
+    # -- parameters -----------------------------------------------------------
+    def init(self, key: jax.Array):
+        cfg = self.cfg
+        params: Dict[str, Any] = {}
+        top = ParamBuilder(param_dtype=jnp.dtype(cfg.param_dtype))
+        declare_embedding(top, "embed", cfg.padded_vocab, cfg.d_model)
+        if not cfg.tie_embeddings:
+            top.declare(
+                "unembed.w", (cfg.d_model, cfg.padded_vocab), (None, "vocab"),
+                init=embedding_init,
+            )
+        declare_norm(top, "final_norm", cfg.d_model, cfg.norm)
+        if cfg.pos_embed == "learned":
+            top.declare(
+                "pos_embed.table", (cfg.max_position, cfg.d_model),
+                (None, None), init=embedding_init,
+            )
+        if cfg.frontend:
+            fd = cfg.frontend_dim or cfg.d_model
+            declare_dense(top, "frontend_proj", fd, cfg.d_model, (None, None))
+        if self._enc_segment is not None:
+            declare_norm(top, "enc_final_norm", cfg.d_model, cfg.norm)
+        params.update(top.init(key))
+
+        cross = self._enc_segment is not None
+        for s, seg in enumerate(self.segments):
+            if isinstance(seg, PeriodicSegment):
+                assert not cross, "periodic segments don't support cross-attn"
+                params[f"blocks_{s}"] = {
+                    f"pos_{j}": _stacked_init(
+                        _stack_builder(self.cfg, sub, cross=False),
+                        _fold_path(key, f"blocks_{s}_pos_{j}"), seg.reps,
+                    )
+                    for j, sub in enumerate(seg.pattern)
+                }
+            else:
+                b = _stack_builder(self.cfg, seg, cross=cross)
+                params[f"blocks_{s}"] = _stacked_init(
+                    b, _fold_path(key, f"blocks_{s}"), seg.count
+                )
+        if self._enc_segment is not None:
+            b = _stack_builder(self.cfg, self._enc_segment, cross=False)
+            params["encoder"] = _stacked_init(
+                b, _fold_path(key, "encoder"), self.cfg.encoder_layers
+            )
+        return params
+
+    def logical_axes(self):
+        cfg = self.cfg
+        axes: Dict[str, Any] = {}
+        top = ParamBuilder(param_dtype=jnp.dtype(cfg.param_dtype))
+        declare_embedding(top, "embed", cfg.padded_vocab, cfg.d_model)
+        if not cfg.tie_embeddings:
+            top.declare(
+                "unembed.w", (cfg.d_model, cfg.padded_vocab), (None, "vocab"),
+                init=embedding_init,
+            )
+        declare_norm(top, "final_norm", cfg.d_model, cfg.norm)
+        if cfg.pos_embed == "learned":
+            top.declare(
+                "pos_embed.table", (cfg.max_position, cfg.d_model),
+                (None, None), init=embedding_init,
+            )
+        if cfg.frontend:
+            fd = cfg.frontend_dim or cfg.d_model
+            declare_dense(top, "frontend_proj", fd, cfg.d_model, (None, None))
+        if self._enc_segment is not None:
+            declare_norm(top, "enc_final_norm", cfg.d_model, cfg.norm)
+        axes.update(top.logical_axes())
+        cross = self._enc_segment is not None
+        for s, seg in enumerate(self.segments):
+            if isinstance(seg, PeriodicSegment):
+                axes[f"blocks_{s}"] = {
+                    f"pos_{j}": jax.tree.map(
+                        lambda a: ("layers",) + a,
+                        _stack_builder(self.cfg, sub, cross=False)
+                        .logical_axes()["layer"],
+                        is_leaf=lambda x: isinstance(x, tuple),
+                    )
+                    for j, sub in enumerate(seg.pattern)
+                }
+                continue
+            b = _stack_builder(self.cfg, seg, cross=cross)
+            axes[f"blocks_{s}"] = jax.tree.map(
+                lambda a: ("layers",) + a,
+                b.logical_axes()["layer"],
+                is_leaf=lambda x: isinstance(x, tuple),
+            )
+        if self._enc_segment is not None:
+            b = _stack_builder(self.cfg, self._enc_segment, cross=False)
+            axes["encoder"] = jax.tree.map(
+                lambda a: ("layers",) + a,
+                b.logical_axes()["layer"],
+                is_leaf=lambda x: isinstance(x, tuple),
+            )
+        return axes
+
+    def num_params(self) -> int:
+        leaves = jax.tree.leaves(jax.eval_shape(lambda: self.init(jax.random.key(0))))
+        return int(sum(np.prod(l.shape) for l in leaves))
+
+    # -- forward ----------------------------------------------------------------
+    def _embed(self, params, tokens, prefix_embeddings):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.compute_dtype)
+        x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(dtype)
+        if cfg.family in ("dense", "moe", "hybrid", "ssm"):
+            x = x * np.sqrt(cfg.d_model) if cfg.name.startswith("gemma") else x
+        prefix_len = 0
+        if prefix_embeddings is not None:
+            proj = apply_dense(params["frontend_proj"], prefix_embeddings, dtype)
+            x = jnp.concatenate([proj, x], axis=1)
+            prefix_len = prefix_embeddings.shape[1]
+        return shard(x, ("batch", "seq", "embed")), prefix_len
+
+    def _positions(self, batch: int, start: int, length: int):
+        pos = jnp.arange(start, start + length, dtype=jnp.int32)
+        return jnp.broadcast_to(pos[None, :], (batch, length))
+
+    def _layer_apply(
+        self, p, x, seg: Segment, *, positions, cache, cache_spec,
+        cross_kv, decode: bool,
+    ):
+        cfg = self.cfg
+        aux = {"load_balance": jnp.float32(0.0), "router_z": jnp.float32(0.0)}
+        # residual stream: sequence-parallel when the rules map "seq_res"
+        x = shard(x, ("batch", "seq_res", "embed"))
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        new_cache = cache
+        if seg.kind == "mamba":
+            y, new_cache = mamba_block(
+                p["mixer"], h, cfg, state=cache, return_state=cache is not None
+            )
+        else:
+            window = cfg.sliding_window if seg.kind == "local" else 0
+            y, new_cache = attention_block(
+                p["mixer"], h, cfg,
+                positions=positions, causal=True, window=window,
+                cache=cache, cache_spec=cache_spec,
+            )
+        x = x + y
+        if cross_kv is not None:
+            h = apply_norm(p["norm_cross"], x, cfg.norm)
+            y, _ = attention_block(
+                p["cross"], h, cfg, positions=positions, cross_kv=cross_kv,
+            )
+            x = x + y
+        if _has_ffn(cfg, seg):
+            x = shard(x, ("batch", "seq_res", "embed"))
+            h = apply_norm(p["norm2"], x, cfg.norm)
+            if seg.is_moe:
+                y, moe_aux = moe_block(
+                    p["ffn"], h, cfg,
+                    impl="einsum" if cfg.moe_num_experts <= 8 else "ragged",
+                )
+                aux = {k: aux[k] + moe_aux[k] for k in aux}
+            else:
+                y = ffn_block(p["ffn"], h, cfg)
+            x = x + y
+        return x, new_cache, aux
+
+    def _run_periodic(
+        self, params_seg, x, seg: PeriodicSegment, *, positions, caches,
+        cache_specs, decode: bool,
+    ):
+        """Scan over period repeats; the body applies one full period."""
+        cfg = self.cfg
+
+        def body(carry, xs):
+            x = carry
+            p_slice, cache_slice = xs
+            aux = {"load_balance": jnp.float32(0.0),
+                   "router_z": jnp.float32(0.0)}
+            new_cache = {} if cache_slice is not None else None
+            for j, sub in enumerate(seg.pattern):
+                cache_j = None if cache_slice is None else cache_slice[f"pos_{j}"]
+                spec_j = None if cache_specs is None else cache_specs[f"pos_{j}"]
+
+                def one(p, x, cache, _sub=sub, _spec=spec_j):
+                    return self._layer_apply(
+                        p, x, _sub, positions=positions, cache=cache,
+                        cache_spec=_spec, cross_kv=None, decode=decode,
+                    )
+
+                if cfg.remat:
+                    one = jax.checkpoint(one)
+                x, nc, a = one(p_slice[f"pos_{j}"], x, cache_j)
+                aux = {k: aux[k] + a[k] for k in aux}
+                if new_cache is not None:
+                    new_cache[f"pos_{j}"] = nc
+            return x, (new_cache, aux)
+
+        xs = (params_seg, caches)
+        x, (new_caches, auxs) = jax.lax.scan(body, x, xs)
+        aux_total = jax.tree.map(lambda a: a.sum(), auxs)
+        return x, new_caches, aux_total
+
+    def _run_segment(
+        self, params_seg, x, seg, *, positions, caches, cache_spec,
+        cross_kvs, decode: bool,
+    ):
+        if isinstance(seg, PeriodicSegment):
+            return self._run_periodic(
+                params_seg, x, seg, positions=positions, caches=caches,
+                cache_specs=cache_spec, decode=decode,
+            )
+        cfg = self.cfg
+        aux_total = {"load_balance": jnp.float32(0.0), "router_z": jnp.float32(0.0)}
+
+        def one(x, p, cache, cross_kv):
+            return self._layer_apply(
+                p, x, seg, positions=positions, cache=cache,
+                cache_spec=cache_spec, cross_kv=cross_kv, decode=decode,
+            )
+
+        if cfg.remat:
+            one = jax.checkpoint(one)
+
+        if seg.scanned:
+            def body(carry, xs):
+                x = carry
+                p, cache, cross_kv = xs
+                x, new_cache, aux = one(x, p, cache, cross_kv)
+                return x, (new_cache, aux)
+
+            xs = (
+                params_seg,
+                caches,
+                cross_kvs,
+            )
+            x, (new_caches, auxs) = jax.lax.scan(body, x, xs)
+            aux_total = jax.tree.map(lambda a: a.sum(), auxs)
+            return x, new_caches, aux_total
+        else:
+            new_caches = [] if caches is not None else None
+            for i in range(seg.count):
+                p_i = jax.tree.map(lambda a: a[i], params_seg)
+                cache_i = (
+                    None if caches is None
+                    else jax.tree.map(lambda a: a[i], caches)
+                )
+                ckv_i = (
+                    None if cross_kvs is None
+                    else jax.tree.map(lambda a: a[i], cross_kvs)
+                )
+                x, new_cache, aux = one(x, p_i, cache_i, ckv_i)
+                aux_total = {k: aux_total[k] + aux[k] for k in aux_total}
+                if new_caches is not None:
+                    new_caches.append(new_cache)
+            if new_caches is not None:
+                new_caches = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *new_caches
+                )
+            return x, new_caches, aux_total
+
+    def _encode(self, params, frames):
+        """Whisper-style encoder over stub frame embeddings (B, S_enc, fd)."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.compute_dtype)
+        x = apply_dense(params["frontend_proj"], frames, dtype)
+        table = sinusoidal_table(frames.shape[1], cfg.d_model)
+        x = x + jnp.asarray(table, dtype)[None]
+        positions = self._positions(frames.shape[0], 0, frames.shape[1])
+        seg = self._enc_segment
+
+        def one(x, p):
+            h = apply_norm(p["norm1"], x, cfg.norm)
+            y, _ = attention_block(
+                p["mixer"], h, cfg, positions=positions, causal=False,
+            )
+            x = x + y
+            h = apply_norm(p["norm2"], x, cfg.norm)
+            return x + ffn_block(p["ffn"], h, cfg)
+
+        if cfg.remat:
+            one = jax.checkpoint(one)
+        if seg.scanned:
+            x, _ = jax.lax.scan(lambda c, p: (one(c, p), None), x, params["encoder"])
+        else:
+            for i in range(seg.count):
+                x = one(x, jax.tree.map(lambda a: a[i], params["encoder"]))
+        return apply_norm(params["enc_final_norm"], x, cfg.norm)
+
+    def forward(
+        self,
+        params,
+        tokens: jax.Array,                    # (B, S)
+        *,
+        prefix_embeddings: Optional[jax.Array] = None,   # vlm stub
+        encoder_frames: Optional[jax.Array] = None,      # audio stub
+        start_position: int = 0,
+    ) -> Tuple[jax.Array, dict]:
+        """Teacher-forced forward: logits over every position."""
+        cfg = self.cfg
+        x, prefix_len = self._embed(params, tokens, prefix_embeddings)
+        B, S = x.shape[0], x.shape[1]
+        positions = self._positions(B, start_position, S)
+        if cfg.pos_embed == "learned":
+            x = x + params["pos_embed"]["table"][positions].astype(x.dtype)
+        elif cfg.pos_embed == "sinusoidal":
+            table = sinusoidal_table(start_position + S, cfg.d_model)
+            x = x + jnp.asarray(table, x.dtype)[positions]
+
+        cross_kv_layers = None
+        if encoder_frames is not None:
+            enc_out = self._encode(params, encoder_frames)
+        aux_total = {"load_balance": jnp.float32(0.0), "router_z": jnp.float32(0.0)}
+        for s, seg in enumerate(self.segments):
+            cross_kvs = None
+            if encoder_frames is not None:
+                # per-layer cross K/V from this segment's cross projections
+                cross_kvs = _segment_cross_kv(
+                    params[f"blocks_{s}"], enc_out, cfg
+                )
+            x, _, aux = self._run_segment(
+                params[f"blocks_{s}"], x, seg,
+                positions=positions, caches=None, cache_spec=None,
+                cross_kvs=cross_kvs, decode=False,
+            )
+            aux_total = {k: aux_total[k] + aux[k] for k in aux_total}
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        if prefix_len:
+            x = x[:, prefix_len:, :]
+        logits = self._unembed(params, x)
+        return logits, aux_total
+
+    def _unembed(self, params, x):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.compute_dtype)
+        if cfg.tie_embeddings:
+            logits = unembed(params["embed"], x, dtype)
+        else:
+            logits = apply_dense(params["unembed"], x, dtype)
+        logits = shard(logits, ("batch", "seq", "vocab"))
+        if cfg.logit_softcap:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        if cfg.padded_vocab != cfg.vocab_size:
+            pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+            logits = jnp.where(pad_mask, jnp.float32(-1e30).astype(logits.dtype), logits)
+        return logits
+
+    # -- loss -------------------------------------------------------------------
+    def loss(
+        self, params, batch: dict
+    ) -> Tuple[jax.Array, dict]:
+        """batch: tokens (B,S), labels (B,S), optional mask/frontend inputs."""
+        logits, aux = self.forward(
+            params,
+            batch["tokens"],
+            prefix_embeddings=batch.get("prefix_embeddings"),
+            encoder_frames=batch.get("encoder_frames"),
+        )
+        ce = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+        total = ce + 1e-2 * aux["load_balance"] + 1e-3 * aux["router_z"]
+        metrics = {"ce": ce, **aux}
+        return total, metrics
+
+    # -- serving ------------------------------------------------------------------
+    def cache_specs(self, max_len: int) -> List[CacheSpec]:
+        """Per-layer cache spec; local layers get ring buffers of window size."""
+        cfg = self.cfg
+        specs = []
+        for kind in cfg.layer_kinds():
+            if kind == "local" and cfg.sliding_window:
+                specs.append(
+                    CacheSpec(length=min(cfg.sliding_window, max_len), ring=True)
+                )
+            elif kind == "mamba":
+                specs.append(None)  # recurrent state instead
+            else:
+                specs.append(CacheSpec(length=max_len, ring=False))
+        return specs
+
+    def _one_layer_cache(self, kind, spec, batch, dtype):
+        if kind == "mamba":
+            return init_mamba_state(batch, self.cfg, dtype)
+        return init_kv_cache(
+            batch, spec, self.cfg.num_kv_heads, self.cfg.head_dim, dtype
+        )
+
+    def init_cache(self, batch: int, max_len: int):
+        """Stacked per-segment caches (scan-compatible). Periodic segments
+        nest caches as {pos_j: stacked-over-reps}."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.compute_dtype)
+        specs = self.cache_specs(max_len)
+        caches = []
+        li = 0
+        for seg in self.segments:
+            if isinstance(seg, PeriodicSegment):
+                entry = {}
+                for j, sub in enumerate(seg.pattern):
+                    one = self._one_layer_cache(sub.kind, specs[li + j],
+                                                batch, dtype)
+                    entry[f"pos_{j}"] = jax.tree.map(
+                        lambda a: jnp.broadcast_to(
+                            a[None], (seg.reps,) + a.shape
+                        ),
+                        one,
+                    )
+                caches.append(entry)
+            else:
+                one = self._one_layer_cache(seg.kind, specs[li], batch, dtype)
+                caches.append(
+                    jax.tree.map(
+                        lambda a: jnp.broadcast_to(
+                            a[None], (seg.count,) + a.shape
+                        ),
+                        one,
+                    )
+                )
+            li += seg.count
+        return caches
+
+    def serve_forward(
+        self,
+        params,
+        tokens: jax.Array,                 # (B, S) prefill or (B, 1) decode
+        caches,                            # from init_cache
+        *,
+        start_position,                    # int or traced scalar
+        encoder_out: Optional[jax.Array] = None,
+        prefix_embeddings: Optional[jax.Array] = None,  # vlm prefill prefix
+        max_len: int,
+    ):
+        """One serving step: prefill (S>1) or decode (S=1)."""
+        cfg = self.cfg
+        x, _ = self._embed(params, tokens, prefix_embeddings)
+        B, S = x.shape[0], x.shape[1]
+        positions = (
+            jnp.arange(S, dtype=jnp.int32)[None, :] + start_position
+        )
+        positions = jnp.broadcast_to(positions, (B, S))
+        if cfg.pos_embed == "learned":
+            x = x + params["pos_embed"]["table"][positions].astype(x.dtype)
+        elif cfg.pos_embed == "sinusoidal":
+            table = sinusoidal_table(cfg.max_position or max_len, cfg.d_model)
+            x = x + jnp.asarray(table, x.dtype)[positions]
+
+        specs = self.cache_specs(max_len)
+        new_caches = []
+        li = 0
+        aux = None
+        for s, seg in enumerate(self.segments):
+            if isinstance(seg, PeriodicSegment):
+                spec = {
+                    f"pos_{j}": (None if sub.kind == "mamba" else specs[li + j])
+                    for j, sub in enumerate(seg.pattern)
+                }
+            else:
+                spec = None if seg.kind == "mamba" else specs[li]
+            cross_kvs = None
+            if encoder_out is not None:
+                cross_kvs = _segment_cross_kv(params[f"blocks_{s}"], encoder_out, cfg)
+            x, nc, _ = self._run_segment(
+                params[f"blocks_{s}"], x, seg,
+                positions=positions, caches=caches[s], cache_spec=spec,
+                cross_kvs=cross_kvs, decode=(S == 1),
+            )
+            new_caches.append(nc)
+            li += seg.count
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        logits = self._unembed(params, x[:, -1:, :])
+        return logits, new_caches
+
+
+def _segment_cross_kv(params_seg, enc_out, cfg: ModelConfig):
+    """Stacked per-layer cross-attention K/V for one segment."""
+    def per_layer(cross_p):
+        return encoder_kv(cross_p, enc_out, cfg)
+
+    return jax.vmap(per_layer)(params_seg["cross"])
+
+
+def _stacked_init(builder: ParamBuilder, key: jax.Array, count: int):
+    """Materialize ``count`` stacked copies of a single-layer builder."""
+    keys = jax.random.split(key, count)
+    stacked = jax.vmap(builder.init)(keys)
+    return stacked["layer"]

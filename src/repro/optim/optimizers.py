@@ -1,0 +1,187 @@
+"""Optimizers as pure pytree transforms (no optax on the box).
+
+API mirrors the (init, update) gradient-transformation pattern:
+
+    opt = sgd(lr=..., momentum=...)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+The paper trains with SGD + momentum (CIFAR/PTB); AdamW is provided for
+the transformer workloads. Both are elementwise, so they commute with
+every sharding the framework uses (node axis, TP, FSDP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree: PyTree):
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+# ---------------------------------------------------------------------------
+# SGD (+ momentum, the paper's optimizer)
+# ---------------------------------------------------------------------------
+def sgd(
+    learning_rate: Callable[[jax.Array], jax.Array] | float,
+    momentum: float = 0.0,
+    weight_decay: float = 0.0,
+    nesterov: bool = False,
+) -> Optimizer:
+    lr_fn = learning_rate if callable(learning_rate) else (lambda _: learning_rate)
+
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["velocity"] = jax.tree.map(
+                lambda p: jnp.zeros_like(p, dtype=jnp.float32), params
+            )
+        return state
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        g = jax.tree.map(lambda x: x.astype(jnp.float32), grads)
+        if weight_decay:
+            g = jax.tree.map(
+                lambda gi, p: gi + weight_decay * p.astype(jnp.float32), g, params
+            )
+        if momentum:
+            vel = jax.tree.map(
+                lambda v, gi: momentum * v + gi, state["velocity"], g
+            )
+            if nesterov:
+                g = jax.tree.map(lambda gi, v: gi + momentum * v, g, vel)
+            else:
+                g = vel
+            new_state = {"step": step, "velocity": vel}
+        else:
+            new_state = {"step": step}
+        updates = jax.tree.map(lambda gi: -lr * gi, g)
+        return updates, new_state
+
+    return Optimizer(init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw(
+    learning_rate: Callable[[jax.Array], jax.Array] | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    lr_fn = learning_rate if callable(learning_rate) else (lambda _: learning_rate)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        g = jax.tree.map(lambda x: x.astype(jnp.float32), grads)
+        mu = jax.tree.map(lambda m, gi: b1 * m + (1 - b1) * gi, state["mu"], g)
+        nu = jax.tree.map(
+            lambda n, gi: b2 * n + (1 - b2) * jnp.square(gi), state["nu"], g
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, n, p):
+            mh = m / bc1
+            nh = n / bc2
+            u = mh / (jnp.sqrt(nh) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return -lr * u
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+def constant_schedule(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def step_decay_schedule(lr: float, boundaries, factor: float = 0.1):
+    """The paper's CIFAR schedule: decay by 10x at epochs 100/150."""
+    bs = jnp.asarray(boundaries)
+
+    def fn(step):
+        k = jnp.sum(step >= bs)
+        return jnp.float32(lr) * (factor ** k.astype(jnp.float32))
+
+    return fn
+
+
+def cosine_schedule(lr: float, total_steps: int, warmup_steps: int = 0,
+                    min_ratio: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        t = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr) * warm * cos
+
+    return fn
+
+
+def make_optimizer(train_cfg) -> Optimizer:
+    """Build from a TrainConfig."""
+    if train_cfg.lr_schedule == "constant":
+        sched = constant_schedule(train_cfg.learning_rate)
+    elif train_cfg.lr_schedule == "cosine":
+        sched = cosine_schedule(
+            train_cfg.learning_rate, train_cfg.steps, train_cfg.warmup_steps
+        )
+    elif train_cfg.lr_schedule == "step":
+        sched = step_decay_schedule(
+            train_cfg.learning_rate,
+            [train_cfg.steps // 2, 3 * train_cfg.steps // 4],
+        )
+    else:
+        raise ValueError(train_cfg.lr_schedule)
+    if train_cfg.optimizer == "sgd":
+        return sgd(sched, momentum=train_cfg.momentum,
+                   weight_decay=train_cfg.weight_decay)
+    if train_cfg.optimizer == "adamw":
+        return adamw(sched, weight_decay=train_cfg.weight_decay)
+    raise ValueError(train_cfg.optimizer)

@@ -1,0 +1,208 @@
+"""Tests for activation-probability optimization (eq. 4) and alpha (Lemma 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    check_doubly_stochastic,
+    empirical_rho,
+    expected_laplacians,
+    matching_decomposition,
+    mixing_matrix,
+    named_graph,
+    optimize_activation_probabilities,
+    optimize_alpha,
+    paper_figure1_graph,
+    plan_matcha,
+    plan_periodic,
+    plan_vanilla,
+    project_capped_simplex,
+    ring_graph,
+    schedule_mixing_matrix,
+    spectral_norm_rho,
+)
+
+
+# ---------------------------------------------------------------------------
+# capped-simplex projection
+# ---------------------------------------------------------------------------
+@settings(max_examples=100, deadline=None)
+@given(
+    st.lists(st.floats(-3, 3), min_size=1, max_size=12),
+    st.floats(0.1, 8.0),
+)
+def test_projection_feasible_and_optimal(vals, budget):
+    p = np.array(vals)
+    q = project_capped_simplex(p, budget)
+    assert np.all(q >= -1e-9) and np.all(q <= 1 + 1e-9)
+    assert q.sum() <= budget + 1e-6
+    # projection is no farther than any feasible grid candidate
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        cand = rng.random(p.shape)
+        if cand.sum() > budget:
+            cand *= budget / cand.sum()
+        assert np.linalg.norm(q - p) <= np.linalg.norm(cand - p) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# budget solver (paper eq. 4)
+# ---------------------------------------------------------------------------
+def test_budget_constraints_hold():
+    g = paper_figure1_graph()
+    ms = matching_decomposition(g)
+    for cb in (0.1, 0.3, 0.5, 0.9):
+        sol = optimize_activation_probabilities(ms, cb, steps=600)
+        p = sol.probabilities
+        assert np.all(p >= -1e-9) and np.all(p <= 1 + 1e-9)
+        assert p.sum() <= cb * len(ms) + 1e-6
+        assert sol.lambda2 > 0  # expected graph stays connected (Thm 2 part 1)
+
+
+def test_lambda2_monotone_in_budget():
+    g = paper_figure1_graph()
+    ms = matching_decomposition(g)
+    lam = [
+        optimize_activation_probabilities(ms, cb, steps=800).lambda2
+        for cb in (0.1, 0.3, 0.5, 0.8, 1.0)
+    ]
+    assert all(b >= a - 1e-3 for a, b in zip(lam, lam[1:]))
+
+
+def test_budget_beats_uniform_feasible_point():
+    """The solver must do at least as well as the paper's feasibility
+    witness p_j = CB (used in Theorem 2's proof)."""
+    g = named_graph("geometric-dense", 16, seed=3)
+    ms = matching_decomposition(g)
+    for cb in (0.2, 0.5):
+        sol = optimize_activation_probabilities(ms, cb, steps=1500)
+        L_uniform, _ = expected_laplacians(ms, np.full(len(ms), cb))
+        lam2_uniform = float(np.linalg.eigvalsh(L_uniform)[1])
+        assert sol.lambda2 >= lam2_uniform - 1e-6
+
+
+def test_budget_matches_scipy_slsqp():
+    from scipy.optimize import minimize
+
+    g = paper_figure1_graph()
+    ms = matching_decomposition(g)
+    Ls = np.stack([sg.laplacian() for sg in ms])
+    cb = 0.5
+    M = len(ms)
+
+    def neg_lam2(p):
+        lam = np.linalg.eigvalsh(np.tensordot(p, Ls, axes=1))
+        return -lam[1]
+
+    best = np.inf
+    for s in range(5):
+        rng = np.random.default_rng(s)
+        res = minimize(
+            neg_lam2,
+            project_capped_simplex(rng.random(M), cb * M),
+            method="SLSQP",
+            bounds=[(0, 1)] * M,
+            constraints=[{"type": "ineq", "fun": lambda p: cb * M - p.sum()}],
+        )
+        best = min(best, res.fun)
+    ours = optimize_activation_probabilities(ms, cb, steps=2000).lambda2
+    assert ours >= -best - 5e-3  # at least as good as SLSQP multistart
+
+
+# ---------------------------------------------------------------------------
+# alpha / rho (Lemma 1 + Theorem 2)
+# ---------------------------------------------------------------------------
+def test_rho_less_than_one_for_connected_graphs():
+    for name in ("paper8", "ring", "hypercube", "geometric-sparse"):
+        g = named_graph(name, 16, seed=2)
+        for cb in (0.1, 0.5, 0.9):
+            plan = plan_matcha(g, cb, budget_steps=500)
+            assert 0.0 <= plan.rho < 1.0  # Theorem 2
+
+
+def test_alpha_beats_theorem2_closed_form():
+    """The exact 1-D solve must be at least as good as the closed-form
+    candidates alpha* = lam/(lam^2+2zeta) from Theorem 2's proof."""
+    g = paper_figure1_graph()
+    ms = matching_decomposition(g)
+    sol = optimize_activation_probabilities(ms, 0.5, steps=800)
+    L_bar, L_tilde = expected_laplacians(ms, sol.probabilities)
+    asol = optimize_alpha(L_bar, L_tilde)
+    lam = np.linalg.eigvalsh(L_bar)
+    zeta = float(np.max(np.abs(np.linalg.eigvalsh(L_tilde))))
+    for lv in (float(lam[1]), float(lam[-1])):
+        cand = lv / (lv * lv + 2 * zeta)
+        assert asol.rho <= spectral_norm_rho(cand, L_bar, L_tilde) + 1e-9
+
+
+def test_rho_convexity_sampled():
+    g = paper_figure1_graph()
+    ms = matching_decomposition(g)
+    sol = optimize_activation_probabilities(ms, 0.4, steps=500)
+    L_bar, L_tilde = expected_laplacians(ms, sol.probabilities)
+    alphas = np.linspace(0.0, 1.0, 21)
+    vals = [spectral_norm_rho(a, L_bar, L_tilde) for a in alphas]
+    for i in range(1, len(vals) - 1):
+        assert vals[i] <= 0.5 * (vals[i - 1] + vals[i + 1]) + 1e-9
+
+
+def test_empirical_rho_matches_analytic():
+    g = paper_figure1_graph()
+    plan = plan_matcha(g, 0.5, seed=0)
+    sched = plan.schedule(4000, seed=11)
+    Ws = [schedule_mixing_matrix(sched, k, plan.alpha) for k in range(4000)]
+    assert empirical_rho(Ws) == pytest.approx(plan.rho, abs=0.02)
+
+
+def test_mixing_matrices_doubly_stochastic():
+    g = named_graph("erdos-renyi", 16, seed=5)
+    plan = plan_matcha(g, 0.3, budget_steps=500)
+    sched = plan.schedule(50, seed=3)
+    for k in range(50):
+        W = schedule_mixing_matrix(sched, k, plan.alpha)
+        assert check_doubly_stochastic(W)
+
+
+# ---------------------------------------------------------------------------
+# paper's comparative claims (theory level, Fig 3)
+# ---------------------------------------------------------------------------
+def test_cb_half_preserves_spectral_norm_paper8():
+    """Fig 3a: at CB=0.5 MATCHA's rho is close to vanilla's (<~10% rel)."""
+    g = paper_figure1_graph()
+    v = plan_vanilla(g)
+    m = plan_matcha(g, 0.5, budget_steps=2000)
+    assert m.rho <= v.rho * 1.15
+
+
+def test_exists_budget_below_one_with_rho_leq_vanilla():
+    """Fig 3: some CB < 1 attains rho <= vanilla (often strictly lower)."""
+    g = paper_figure1_graph()
+    v = plan_vanilla(g)
+    rhos = [plan_matcha(g, cb, budget_steps=1500).rho for cb in (0.6, 0.75, 0.9)]
+    assert min(rhos) <= v.rho + 1e-6
+
+
+def test_matcha_beats_periodic_at_same_budget():
+    """Fig 3 / Fig 6: MATCHA rho < P-DecenSGD rho at equal CB."""
+    g = paper_figure1_graph()
+    for cb in (0.25, 0.5):
+        m = plan_matcha(g, cb, budget_steps=1500)
+        p, _ = plan_periodic(g, cb)
+        assert m.rho < p.rho
+
+
+def test_matcha_cb1_equals_vanilla():
+    g = paper_figure1_graph()
+    m = plan_matcha(g, 1.0)
+    v = plan_vanilla(g)
+    assert m.rho == pytest.approx(v.rho, abs=1e-9)
+    assert np.allclose(m.probabilities, 1.0)
+
+
+def test_expected_comm_units_respects_budget():
+    g = named_graph("geometric-dense", 16, seed=3)
+    for cb in (0.2, 0.5, 0.8):
+        plan = plan_matcha(g, cb, budget_steps=500)
+        assert plan.expected_comm_units <= cb * plan.vanilla_comm_units + 1e-6
+        sched = plan.schedule(5000, seed=1)
+        assert sched.expected_comm_units() <= cb * plan.vanilla_comm_units * 1.1

@@ -1,0 +1,132 @@
+"""Property + unit tests for graphs and Misra-Gries matching decomposition."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Graph,
+    complete_graph,
+    erdos_renyi_graph,
+    hypercube_graph,
+    matching_decomposition,
+    matching_permutation,
+    misra_gries_coloring,
+    named_graph,
+    paper_figure1_graph,
+    random_geometric_graph,
+    ring_graph,
+    star_graph,
+    torus_graph,
+)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis strategy: random connected simple graphs
+# ---------------------------------------------------------------------------
+@st.composite
+def connected_graphs(draw, max_m: int = 12):
+    m = draw(st.integers(min_value=2, max_value=max_m))
+    all_edges = list(itertools.combinations(range(m), 2))
+    # random spanning tree via random Prufer-ish attachment => connected
+    perm = draw(st.permutations(list(range(m))))
+    tree = []
+    for i in range(1, m):
+        j = draw(st.integers(min_value=0, max_value=i - 1))
+        tree.append((perm[i], perm[j]))
+    extra = draw(st.lists(st.sampled_from(all_edges), max_size=2 * m))
+    return Graph(m, tuple(tree) + tuple(extra))
+
+
+@settings(max_examples=60, deadline=None)
+@given(connected_graphs())
+def test_misra_gries_properness_and_bound(g: Graph):
+    coloring = misra_gries_coloring(g)
+    # covers edge set exactly
+    assert set(coloring) == set(g.edges)
+    # proper: no two edges at a vertex share a color
+    for v in range(g.m):
+        colors = [c for (a, b), c in coloring.items() if v in (a, b)]
+        assert len(colors) == len(set(colors))
+    # Vizing bound
+    assert max(coloring.values(), default=-1) + 1 <= g.max_degree() + 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(connected_graphs())
+def test_matching_decomposition_properties(g: Graph):
+    ms = matching_decomposition(g)
+    # each subgraph is a matching: vertex-disjoint edges
+    for sg in ms:
+        verts = [v for e in sg.edges for v in e]
+        assert len(verts) == len(set(verts))
+    # disjoint edge sets covering E exactly
+    union = [e for sg in ms for e in sg.edges]
+    assert sorted(union) == sorted(g.edges)
+    # M in {Delta, Delta+1} guarantee is Delta+1 upper bound; lower bound Delta
+    assert g.max_degree() <= len(ms) <= g.max_degree() + 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(connected_graphs())
+def test_matching_permutations_are_involutions(g: Graph):
+    for sg in matching_decomposition(g):
+        perm = matching_permutation(sg)
+        assert np.array_equal(perm[perm], np.arange(g.m))
+        moved = np.flatnonzero(perm != np.arange(g.m))
+        assert len(moved) == 2 * len(sg.edges)
+
+
+def test_paper_figure1_graph_properties():
+    g = paper_figure1_graph()
+    assert g.m == 8
+    assert g.max_degree() == 5
+    assert int(g.degrees()[4]) == 1          # node 4: degree 1 (critical link)
+    assert int(g.degrees()[1]) == 5          # node 1: the busiest node
+    assert g.is_connected()
+    ms = matching_decomposition(g)
+    assert 5 <= len(ms) <= 6
+
+
+@pytest.mark.parametrize(
+    "g,expected_M",
+    [
+        (ring_graph(8), (2, 3)),
+        (star_graph(6), (5, 6)),
+        (complete_graph(4), (3, 4)),
+        (hypercube_graph(3), (3, 4)),
+        (torus_graph(4, 4), (4, 5)),
+    ],
+)
+def test_known_families(g, expected_M):
+    ms = matching_decomposition(g)
+    assert expected_M[0] <= len(ms) <= expected_M[1]
+
+
+def test_named_graph_registry():
+    for name in [
+        "paper8", "ring", "torus", "hypercube", "complete", "star",
+        "geometric-sparse", "geometric-dense", "erdos-renyi",
+    ]:
+        g = named_graph(name, 16, seed=1)
+        assert g.is_connected()
+
+
+def test_geometric_and_er_are_seeded_deterministic():
+    a = random_geometric_graph(16, 0.42, seed=7)
+    b = random_geometric_graph(16, 0.42, seed=7)
+    assert a.edges == b.edges
+    c = erdos_renyi_graph(16, 0.3, seed=9)
+    d = erdos_renyi_graph(16, 0.3, seed=9)
+    assert c.edges == d.edges
+
+
+def test_laplacian_basics():
+    g = paper_figure1_graph()
+    L = g.laplacian()
+    assert np.allclose(L, L.T)
+    assert np.allclose(L @ np.ones(g.m), 0.0)
+    lam = np.linalg.eigvalsh(L)
+    assert lam[0] == pytest.approx(0.0, abs=1e-9)
+    assert lam[1] > 0  # connected

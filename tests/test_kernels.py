@@ -1,0 +1,190 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gossip_axpy import gossip_axpy
+from repro.kernels.grouped_matmul import grouped_matmul
+from repro.kernels.ssm_scan import ssm_scan
+from repro.kernels import ops
+from repro.kernels.ref import (
+    attention_ref, gossip_axpy_ref, grouped_matmul_ref, ssm_scan_ref,
+)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(
+        atol=2e-5, rtol=2e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,Hq,Hkv,hd,bq,bk",
+    [
+        (1, 128, 4, 4, 64, 64, 64),     # MHA
+        (2, 256, 8, 2, 64, 128, 64),    # GQA 4:1
+        (1, 192, 6, 1, 32, 64, 64),     # MQA, ragged grid
+        (2, 64, 4, 4, 128, 32, 32),     # wide heads
+    ],
+)
+def test_flash_attention_sweep(B, S, Hq, Hkv, hd, bq, bk, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), dtype)
+    for causal, window in [(True, 0), (True, S // 4), (False, 0)]:
+        got = flash_attention(
+            q, k, v, causal=causal, window=window,
+            block_q=bq, block_k=bk, interpret=True,
+        )
+        want = attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **_tol(dtype),
+        )
+
+
+def test_flash_attention_padding_wrapper():
+    """ops.attention pads ragged seq lens to block multiples."""
+    ks = jax.random.split(jax.random.key(1), 3)
+    B, S, H, hd = 1, 100, 4, 64        # 100 does not divide 64
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    got = ops.attention(q, k, v, causal=True, impl="interpret", block_q=64, block_k=64)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_fully_masked_rows_are_finite():
+    """window smaller than block: early rows of late blocks fully masked."""
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    out = flash_attention(q, k, v, causal=True, window=8, block_q=32, block_k=32,
+                          interpret=True)
+    assert bool(jnp.isfinite(out).all())
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,P,N,chunk",
+    [
+        (1, 64, 2, 16, 8, 16),
+        (2, 128, 4, 32, 16, 32),
+        (1, 256, 2, 64, 128, 128),     # full-size state dims
+        (2, 96, 3, 16, 8, 32),         # nc = 3
+    ],
+)
+def test_ssm_scan_sweep(B, S, H, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.key(0), 5)
+    x = (jax.random.normal(ks[0], (B, S, H, P)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(dtype)
+    A = -jnp.exp(jax.random.uniform(ks[2], (H,)))
+    Bm = (jax.random.normal(ks[3], (B, S, N)) * 0.3).astype(dtype)
+    Cm = (jax.random.normal(ks[4], (B, S, N)) * 0.3).astype(dtype)
+    y, h = ssm_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    y_ref, h_ref = ssm_scan_ref(x, dt, A, Bm, Cm)
+    tol = dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(
+        atol=1e-4, rtol=1e-3
+    )
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32), **tol
+    )
+    np.testing.assert_allclose(
+        np.asarray(h, np.float32), np.asarray(h_ref, np.float32), **tol
+    )
+
+
+def test_ssm_scan_matches_chunked_model_path():
+    """Kernel == models.ssm.ssd_chunked == sequential oracle."""
+    from repro.models.ssm import ssd_chunked
+
+    ks = jax.random.split(jax.random.key(7), 5)
+    B, S, H, P, N = 2, 128, 2, 16, 8
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.uniform(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, N)) * 0.3
+    yk, hk = ssm_scan(x, dt, A, Bm, Cm, chunk=32, interpret=True)
+    yc, hc = ssd_chunked(x, dt, A, Bm, Cm, chunk=32, return_final_state=True)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yc), atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hc), atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# gossip axpy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "shape", [(17,), (1003, 77), (4, 33, 9), (2048, 1024)]
+)
+@pytest.mark.parametrize("alpha", [0.0, 0.3, 1.0])
+def test_gossip_axpy_sweep(shape, alpha, dtype):
+    ks = jax.random.split(jax.random.key(0), 2)
+    x = jax.random.normal(ks[0], shape).astype(dtype)
+    y = jax.random.normal(ks[1], shape).astype(dtype)
+    got = gossip_axpy(x, y, alpha, interpret=True)
+    want = gossip_axpy_ref(x, y, alpha)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_gossip_update_tree():
+    tree_x = {"a": jnp.ones((64, 64)), "b": {"c": jnp.zeros((130,))}}
+    tree_y = {"a": jnp.zeros((64, 64)), "b": {"c": jnp.ones((130,))}}
+    out = ops.gossip_update(tree_x, tree_y, 0.25, impl="interpret")
+    assert float(out["a"][0, 0]) == pytest.approx(0.75)
+    assert float(out["b"]["c"][0]) == pytest.approx(0.25)
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul (megablox-lite)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "M,K,N,G,bm,bn",
+    [
+        (96, 32, 48, 4, 32, 32),
+        (256, 64, 128, 8, 128, 64),
+        (130, 16, 40, 3, 32, 32),      # ragged tail blocks
+        (64, 128, 256, 16, 32, 128),   # many groups, some empty
+    ],
+)
+def test_grouped_matmul_sweep(M, K, N, G, bm, bn, dtype):
+    ks = jax.random.split(jax.random.key(0), 2)
+    x = jax.random.normal(ks[0], (M, K)).astype(dtype)
+    w = (jax.random.normal(ks[1], (G, K, N)) * 0.2).astype(dtype)
+    rng = np.random.default_rng(M + G)
+    cuts = np.sort(rng.choice(M, G - 1, replace=False))
+    sizes = np.diff(np.concatenate([[0], cuts, [M]])).astype(np.int32)
+    got = grouped_matmul(x, w, jnp.asarray(sizes), block_m=bm, block_n=bn,
+                         interpret=True)
+    want = grouped_matmul_ref(x, w, jnp.asarray(sizes))
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **_tol(dtype),
+    )
+
+
+def test_grouped_matmul_empty_groups():
+    """Zero-size groups are skipped without corrupting neighbours."""
+    x = jax.random.normal(jax.random.key(1), (64, 16))
+    w = jax.random.normal(jax.random.key(2), (4, 16, 24)) * 0.3
+    sizes = jnp.asarray([0, 40, 0, 24], jnp.int32)
+    got = grouped_matmul(x, w, sizes, block_m=32, block_n=24, interpret=True)
+    want = grouped_matmul_ref(x, w, sizes)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)

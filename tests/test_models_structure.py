@@ -1,0 +1,125 @@
+"""Model structure: segmentation, periodic scanning, vocab padding, rope."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, get_smoke_config
+from repro.models.transformer import (
+    Model, PeriodicSegment, Segment, segment_layers,
+)
+
+
+def test_segmentation_uniform_archs_scan():
+    for arch in ("nemotron_4_340b", "granite_20b", "mamba2_370m",
+                 "internlm2_1_8b", "internvl2_1b"):
+        segs = segment_layers(get_config(arch))
+        assert len(segs) == 1 and isinstance(segs[0], Segment)
+        assert segs[0].scanned, arch
+
+
+def test_segmentation_kimi_first_dense():
+    segs = segment_layers(get_config("kimi_k2_1t_a32b"))
+    assert [s.count for s in segs] == [1, 60]
+    assert not segs[0].is_moe and segs[1].is_moe
+    assert segs[1].scanned
+
+
+def test_segmentation_periodic_hybrids():
+    jamba = segment_layers(get_config("jamba_v0_1_52b"))
+    assert isinstance(jamba[0], PeriodicSegment)
+    assert jamba[0].period == 8 and jamba[0].reps == 4
+    kinds = [s.kind for s in jamba[0].pattern]
+    assert kinds.count("attn") == 1 and kinds.count("mamba") == 7  # 1:7
+    gemma = segment_layers(get_config("gemma3_4b"))
+    assert isinstance(gemma[0], PeriodicSegment)
+    assert gemma[0].period == 6 and gemma[0].reps == 5
+    assert [s.kind for s in gemma[0].pattern].count("local") == 5  # 5:1
+    # remainder layers
+    assert sum(s.count for s in gemma) == 34
+
+
+def test_periodic_training_gradients_flow():
+    cfg = dataclasses.replace(
+        get_smoke_config("jamba_v0_1_52b"),
+        num_layers=8, attn_every=2, moe_every=2, remat=True,
+        scan_layers=True,
+    )
+    model = Model(cfg)
+    assert isinstance(model.segments[0], PeriodicSegment)
+    params = model.init(jax.random.key(0))
+    batch = {
+        "tokens": jax.random.randint(jax.random.key(1), (2, 32), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.key(2), (2, 32), 0,
+                                     cfg.vocab_size),
+    }
+    (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(
+        params, batch
+    )
+    assert bool(jnp.isfinite(loss))
+    gnorms = [float(jnp.linalg.norm(g.astype(jnp.float32).ravel()))
+              for g in jax.tree.leaves(grads)]
+    assert all(np.isfinite(gnorms))
+    assert max(gnorms) > 0
+
+
+def test_vocab_padding_masks_logits():
+    cfg = dataclasses.replace(
+        get_smoke_config("internlm2_1_8b"), vocab_size=500, remat=False
+    )
+    assert cfg.padded_vocab == 512
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (1, 8), 0, 500)
+    logits, _ = model.forward(params, tokens)
+    assert logits.shape[-1] == 512
+    pad = np.asarray(logits[..., 500:], np.float32)
+    assert (pad < -1e29).all()
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE attention scores depend only on relative positions."""
+    from repro.models.layers import apply_rope
+
+    q = jax.random.normal(jax.random.key(0), (1, 8, 2, 32))
+    k = jax.random.normal(jax.random.key(1), (1, 8, 2, 32))
+    pos0 = jnp.arange(8, dtype=jnp.int32)[None]
+    pos1 = pos0 + 100
+    def scores(pos):
+        qr = apply_rope(q, pos, 10000.0)
+        kr = apply_rope(k, pos, 10000.0)
+        return jnp.einsum("bqhd,bkhd->bhqk", qr, kr)
+    np.testing.assert_allclose(
+        np.asarray(scores(pos0)), np.asarray(scores(pos1)),
+        atol=1e-3, rtol=1e-3,
+    )
+
+
+def test_cache_specs_ring_for_local_layers():
+    cfg = get_config("gemma3_4b")
+    model = Model(cfg)
+    specs = model.cache_specs(max_len=32768)
+    kinds = cfg.layer_kinds()
+    for spec, kind in zip(specs, kinds):
+        if kind == "local":
+            assert spec.ring and spec.length == cfg.sliding_window
+        else:
+            assert not spec.ring and spec.length == 32768
+
+
+def test_long_context_variant_policy():
+    from repro.configs.base import long_context_variant
+
+    # pure attention arch -> windowed variant
+    cfg, note = long_context_variant(get_config("nemotron_4_340b"))
+    assert note == "windowed-variant"
+    assert all(k == "local" for k in cfg.layer_kinds())
+    assert cfg.sliding_window == 4096
+    # ssm/hybrid/local-global -> native
+    for arch, want in (("mamba2_370m", "native"), ("jamba_v0_1_52b", "native"),
+                       ("gemma3_4b", "native-local-global")):
+        _, note = long_context_variant(get_config(arch))
+        assert note == want

@@ -1,0 +1,245 @@
+"""Optimizers, data pipeline, checkpointing, MoE paths, SSD paths."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_smoke_config
+from repro.optim.optimizers import (
+    adamw, apply_updates, clip_by_global_norm, cosine_schedule,
+    constant_schedule, global_norm, sgd, step_decay_schedule,
+)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+def _quadratic_params():
+    return {"w": jnp.array([3.0, -2.0]), "b": {"c": jnp.array([1.5])}}
+
+
+def _quadratic_loss(p):
+    return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"]["c"] ** 2)
+
+
+@pytest.mark.parametrize("make", [
+    lambda: sgd(0.1), lambda: sgd(0.1, momentum=0.9),
+    lambda: sgd(0.1, momentum=0.9, nesterov=True),
+    lambda: adamw(0.1), lambda: adamw(0.1, weight_decay=0.01),
+])
+def test_optimizers_descend_quadratic(make):
+    opt = make()
+    p = _quadratic_params()
+    s = opt.init(p)
+    l0 = float(_quadratic_loss(p))
+    for _ in range(60):
+        g = jax.grad(_quadratic_loss)(p)
+        u, s = opt.update(g, s, p)
+        p = apply_updates(p, u)
+    assert float(_quadratic_loss(p)) < l0 * 1e-2
+
+
+def test_sgd_momentum_matches_manual():
+    opt = sgd(0.1, momentum=0.9)
+    p = {"w": jnp.array([1.0])}
+    s = opt.init(p)
+    g = {"w": jnp.array([2.0])}
+    u1, s = opt.update(g, s, p)          # v = 2.0, u = -0.2
+    assert float(u1["w"][0]) == pytest.approx(-0.2)
+    u2, s = opt.update(g, s, p)          # v = 0.9*2+2 = 3.8, u = -0.38
+    assert float(u2["w"][0]) == pytest.approx(-0.38)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped = clip_by_global_norm(g, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    g2 = {"a": jnp.full((4,), 1e-3)}
+    same = clip_by_global_norm(g2, 1.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), np.asarray(g2["a"]))
+
+
+def test_schedules():
+    c = constant_schedule(0.5)
+    assert float(c(jnp.int32(100))) == 0.5
+    sd = step_decay_schedule(1.0, [10, 20])
+    assert float(sd(jnp.int32(5))) == pytest.approx(1.0)
+    assert float(sd(jnp.int32(15))) == pytest.approx(0.1)
+    assert float(sd(jnp.int32(25))) == pytest.approx(0.01, rel=1e-5)
+    cos = cosine_schedule(1.0, 100, warmup_steps=10)
+    assert float(cos(jnp.int32(5))) == pytest.approx(0.5, rel=0.05)
+    assert float(cos(jnp.int32(100))) == pytest.approx(0.1, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+def test_synthetic_stream_learnable_and_partitioned():
+    from repro.data.pipeline import DecentralizedBatches, SyntheticCorpus
+
+    cfg = get_smoke_config("internlm2_1_8b")
+    data = DecentralizedBatches(cfg, num_nodes=4, batch_per_node=2,
+                                seq_len=32, seed=0)
+    b = next(iter(data))
+    assert b["tokens"].shape == (4, 2, 32)
+    assert b["labels"].shape == (4, 2, 32)
+    # labels are next-token shifted
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=0)
+    rng = np.random.default_rng(1)
+    toks = corpus.sample(rng, 1000)
+    # Markov structure -> bigram entropy < unigram entropy (learnable)
+    uni = np.bincount(toks, minlength=cfg.vocab_size) / len(toks)
+    h_uni = -(uni[uni > 0] * np.log(uni[uni > 0])).sum()
+    assert h_uni < np.log(cfg.vocab_size) * 0.9
+
+
+def test_input_specs_shapes():
+    from repro.configs.base import INPUT_SHAPES
+    from repro.data.pipeline import input_specs
+
+    cfg = get_smoke_config("internlm2_1_8b")
+    tr = input_specs(cfg, INPUT_SHAPES["train_4k"], num_nodes=16)
+    assert tr["tokens"].shape == (16, 16, 4096)
+    pf = input_specs(cfg, INPUT_SHAPES["prefill_32k"])
+    assert pf["tokens"].shape == (32, 32768)
+    dc = input_specs(cfg, INPUT_SHAPES["decode_32k"])
+    assert dc["tokens"].shape == (128, 1)
+    vlm = get_smoke_config("internvl2_1b")
+    trv = input_specs(vlm, INPUT_SHAPES["train_4k"], num_nodes=16)
+    assert trv["prefix_embeddings"].shape[2] == vlm.encoder_seq
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import ckpt
+
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": {"c": jnp.ones((4,), jnp.bfloat16)},
+        "t": (jnp.zeros((2,)), jnp.ones((1,), jnp.int32)),
+    }
+    path = os.path.join(tmp_path, "x")
+    ckpt.save(path, tree, metadata={"step": 7})
+    got, meta = ckpt.restore(path)
+    assert meta["step"] == 7
+    assert got["b"]["c"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(tree["a"]))
+    assert isinstance(got["t"], tuple)
+
+
+def test_run_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import ckpt
+
+    params = {"w": jnp.arange(12, dtype=jnp.float32).reshape(4, 3)}
+    opt = {"step": jnp.arange(4), "vel": {"w": jnp.ones((4, 3))}}
+    d = os.path.join(tmp_path, "run")
+    ckpt.save_run(d, params, opt, step=42, per_node_files=True)
+    p2, o2, step = ckpt.restore_run(d)
+    assert step == 42
+    np.testing.assert_array_equal(np.asarray(p2["w"]), np.asarray(params["w"]))
+
+
+# ---------------------------------------------------------------------------
+# MoE: ragged path == einsum oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("E,k,T,D,F", [(4, 2, 24, 16, 32), (8, 2, 40, 8, 16)])
+def test_moe_ragged_matches_einsum(E, k, T, D, F):
+    import dataclasses
+
+    from repro.models.ffn import declare_moe, moe_block
+    from repro.models.module import ParamBuilder
+
+    cfg = dataclasses.replace(
+        get_smoke_config("dbrx_132b"),
+        d_model=D, moe_num_experts=E, moe_top_k=k, moe_d_ff=F,
+    )
+    b = ParamBuilder()
+    declare_moe(b, "moe", cfg)
+    params = b.init(jax.random.key(0))["moe"]
+    x = jax.random.normal(jax.random.key(1), (2, T // 2, D), jnp.float32)
+    y1, aux1 = moe_block(params, x, cfg, impl="einsum")
+    y2, aux2 = moe_block(params, x, cfg, impl="ragged")
+    np.testing.assert_allclose(
+        np.asarray(y1, np.float32), np.asarray(y2, np.float32),
+        atol=2e-2, rtol=2e-2,
+    )
+    # ragged path averages the load-balance statistic per example (it
+    # dispatches per example to keep the sort shard-local); the statistic
+    # is a product of token-means, so per-example vs global means differ
+    # slightly. Outputs above are asserted tightly; the aux only loosely.
+    assert float(aux1["load_balance"]) == pytest.approx(
+        float(aux2["load_balance"]), rel=0.1
+    )
+
+
+def test_moe_load_balance_uniform_router():
+    """A uniform router gives load_balance ~= E * E * (1/E) * (1/E) * E = 1."""
+    import dataclasses
+
+    from repro.models.ffn import _router
+
+    cfg = dataclasses.replace(
+        get_smoke_config("dbrx_132b"), moe_num_experts=4, moe_top_k=2,
+    )
+    p = {"router": {"w": jnp.zeros((cfg.d_model, 4))}}
+    x2d = jax.random.normal(jax.random.key(0), (64, cfg.d_model))
+    gates, idx, aux = _router(p, x2d, cfg)
+    # perfectly uniform probs -> lb = E * sum(frac_e / E) = k
+    assert float(aux["load_balance"]) == pytest.approx(cfg.moe_top_k, rel=0.01)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked == sequential for random chunk sizes (hypothesis)
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(
+    st.sampled_from([16, 32, 64]),
+    st.sampled_from([8, 16, 32]),
+    st.integers(1, 3),
+)
+def test_ssd_chunked_equals_sequential(S, chunk, seed):
+    from repro.models.ssm import ssd_chunked, ssd_sequential
+
+    if S % chunk:
+        chunk = S
+    ks = jax.random.split(jax.random.key(seed), 5)
+    Bz, H, P, N = 2, 2, 8, 4
+    x = jax.random.normal(ks[0], (Bz, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bz, S, H)))
+    A = -jnp.exp(jax.random.uniform(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (Bz, S, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (Bz, S, N)) * 0.3
+    h0 = jax.random.normal(jax.random.key(9), (Bz, H, N, P)) * 0.1
+    y1, h1 = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk, h0=h0,
+                         return_final_state=True)
+    y2, h2 = ssd_sequential(x, dt, A, Bm, Cm, h0=h0, return_final_state=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Attention: chunked XLA path == plain path
+# ---------------------------------------------------------------------------
+def test_sdpa_chunked_equals_plain():
+    from repro.models.attention import sdpa, sdpa_chunked
+
+    ks = jax.random.split(jax.random.key(0), 3)
+    B_, S_, H_, hd = 2, 64, 4, 16
+    q = jax.random.normal(ks[0], (B_, S_, H_, hd))
+    k = jax.random.normal(ks[1], (B_, S_, 2, hd))
+    v = jax.random.normal(ks[2], (B_, S_, 2, hd))
+    pos = jnp.broadcast_to(jnp.arange(S_, dtype=jnp.int32)[None], (B_, S_))
+    for causal, window in [(True, 0), (True, 16), (False, 0)]:
+        a = sdpa(q, k, v, q_positions=pos, k_positions=pos, causal=causal,
+                 window=window)
+        b = sdpa_chunked(q, k, v, q_positions=pos, k_positions=pos,
+                         causal=causal, window=window, block_q=16)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
