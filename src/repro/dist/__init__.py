@@ -1,0 +1,9 @@
+"""Distributed runtime: sharding rules, shard_map gossip, train/serve steps.
+
+Layering (low to high):
+
+  sharding    logical-axis -> PartitionSpec rules; ``shard`` constraints
+  gossip      per-matching ppermute averaging (W = I - alpha * sum L_j)
+  decen_train stacked per-node state + the decentralized SGD train step
+  serve       prefill/decode step functions + cache shardings
+"""

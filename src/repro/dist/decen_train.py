@@ -1,0 +1,210 @@
+"""Decentralized training runtime: stacked per-node state + train step.
+
+Layout: every node owns a full model replica, so all training state
+carries a leading node dim sharded over the mesh's node axes ("data",
+or ("pod", "data") multi-pod); within a node, parameters may be
+tensor-parallel over "model" per the spec's rules. One train step is a
+``jax.shard_map`` whose manual axes are the node axes:
+
+    local SGD step    grads on the node's own batch shard
+    gossip            ppermute matching exchanges (repro.dist.gossip)
+
+Gossip modes (paper Section 3.3 execution strategies):
+    "masked"  all matchings exchanged, deltas scaled by the (traced)
+              schedule bits — ONE executable for the whole run
+    "static"  the activated subset is baked in — one executable per
+              distinct subset, no wasted exchanges
+    "none"    local SGD only (the no-communication baseline)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+import repro  # ensures the jax.shard_map compat shim is installed
+from repro.configs.base import ModelConfig
+from repro.dist import sharding as shd
+from repro.dist.gossip import NodeAxisInfo, mix_matchings, mix_matchings_masked
+from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DistSpec:
+    """Mesh + node layout + sharding rules for one decentralized run."""
+
+    mesh: Mesh
+    cfg: ModelConfig
+    num_nodes: int
+    multi_pod: bool
+    sequence_parallel: bool
+    rules: shd.ShardingRules
+
+    @property
+    def node_axes(self) -> Tuple[str, ...]:
+        return ("pod", "data") if self.multi_pod else ("data",)
+
+    @property
+    def nodes_axis(self):
+        """The value to put in a PartitionSpec for the stacked node dim."""
+        return self.rules.mapping["nodes"]
+
+    @property
+    def node_info(self) -> NodeAxisInfo:
+        return NodeAxisInfo(axis_names=self.node_axes, num_nodes=self.num_nodes)
+
+
+def make_spec(
+    mesh: Mesh,
+    cfg: ModelConfig,
+    *,
+    multi_pod: bool = False,
+    sequence_parallel: bool = False,
+) -> DistSpec:
+    num = mesh.shape["data"] * (mesh.shape["pod"] if multi_pod else 1)
+    rules = shd.train_rules(
+        mesh, cfg, multi_pod=multi_pod, sequence_parallel=sequence_parallel
+    )
+    return DistSpec(
+        mesh=mesh,
+        cfg=cfg,
+        num_nodes=int(num),
+        multi_pod=multi_pod,
+        sequence_parallel=sequence_parallel,
+        rules=rules,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stacked (node-axis-leading) state
+# ---------------------------------------------------------------------------
+def _stack(tree: PyTree, num_nodes: int) -> PyTree:
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (num_nodes,) + a.shape), tree
+    )
+
+
+def init_stacked_params(model, spec: DistSpec, seed: int = 0) -> PyTree:
+    """All nodes start from the same replica (standard DecenSGD init);
+    divergence comes from per-node data (or an explicit perturbation)."""
+    params = model.init(jax.random.key(seed))
+    return _stack(params, spec.num_nodes)
+
+
+def init_stacked_opt_state(opt: Optimizer, model, spec: DistSpec) -> PyTree:
+    abs_local = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    zeros_local = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), abs_local)
+    return _stack(opt.init(zeros_local), spec.num_nodes)
+
+
+def stacked_param_shardings(model, spec: DistSpec) -> PyTree:
+    base = shd.param_pspecs(model.logical_axes(), spec.rules)
+    nodes = spec.nodes_axis
+    return jax.tree.map(
+        lambda s: P(nodes, *s), base, is_leaf=lambda v: isinstance(v, P)
+    )
+
+
+def stacked_opt_shardings(
+    opt: Optimizer, model, spec: DistSpec, pspecs: Optional[PyTree] = None
+) -> PyTree:
+    """Optimizer-state PartitionSpecs: param-shaped slots (velocity, mu,
+    nu, ...) mirror the stacked param shardings; scalar slots (step)
+    shard only over the node axis."""
+    if pspecs is None:
+        pspecs = stacked_param_shardings(model, spec)
+    abs_local = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    state_abs = jax.eval_shape(opt.init, abs_local)
+    params_struct = jax.tree.structure(abs_local)
+    nodes = spec.nodes_axis
+    out = {}
+    for key, sub in state_abs.items():
+        if jax.tree.structure(sub) == params_struct:
+            out[key] = pspecs
+        else:
+            out[key] = jax.tree.map(lambda _: P(nodes), sub)
+    return out
+
+
+def consensus_distance(stacked_params: PyTree):
+    """RMS-over-nodes Frobenius distance to the node mean:
+    sqrt(mean_i sum_leaves ||x_i - x_bar||^2). The quantity MATCHA's
+    Theorem 1 bounds; 'local' (no-gossip) training makes it blow up."""
+    acc = None
+    for leaf in jax.tree.leaves(stacked_params):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        x = leaf.astype(jnp.float32)
+        mu = x.mean(axis=0, keepdims=True)
+        d = jnp.sum((x - mu) ** 2, axis=tuple(range(1, x.ndim)))
+        acc = d if acc is None else acc + d
+    if acc is None:
+        return jnp.float32(0.0)
+    return jnp.sqrt(jnp.mean(acc))
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+def make_train_step(
+    model,
+    opt: Optimizer,
+    plan,                                 # repro.core.MatchaPlan
+    spec: DistSpec,
+    *,
+    gossip_mode: str = "masked",
+    active: Sequence[int] = (),
+    grad_clip: float = 0.0,
+):
+    """Build the jitted decentralized step:
+
+        params, opt_state, losses, metrics = step(params, opt_state,
+                                                  batch, bits)
+
+    ``params``/``opt_state`` are node-stacked; ``batch`` leaves are
+    (nodes, per_node_batch, ...); ``bits`` is the (M,) float activation
+    row of the a-priori schedule (ignored unless gossip_mode="masked").
+    ``losses``/``metrics`` come back per node, shape (nodes,).
+    """
+    if gossip_mode not in ("masked", "static", "none"):
+        raise ValueError(f"unknown gossip_mode {gossip_mode!r}")
+    info = spec.node_info
+    nodes_ax = spec.nodes_axis
+    mesh = spec.mesh
+    perms = np.asarray(plan.permutations)
+    alpha = float(plan.alpha)
+    active = tuple(int(j) for j in active)
+
+    def body(params, opt_state, batch, bits):
+        # strip the (local size 1) node dim: per-node trees
+        p = jax.tree.map(lambda a: a[0], params)
+        s = jax.tree.map(lambda a: a[0], opt_state)
+        b = jax.tree.map(lambda a: a[0], batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True
+        )(p, b)
+        if grad_clip:
+            grads = clip_by_global_norm(grads, grad_clip)
+        updates, s = opt.update(grads, s, p)
+        p = apply_updates(p, updates)
+        if gossip_mode == "masked":
+            p = mix_matchings_masked(p, alpha, perms, bits, info)
+        elif gossip_mode == "static":
+            p = mix_matchings(p, alpha, perms, active, info)
+        expand = lambda t: jax.tree.map(lambda a: a[None], t)
+        return expand(p), expand(s), loss[None], expand(metrics)
+
+    stepped = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(nodes_ax), P(nodes_ax), P(nodes_ax), P()),
+        out_specs=(P(nodes_ax), P(nodes_ax), P(nodes_ax), P(nodes_ax)),
+        axis_names=set(spec.node_axes),
+    )
+    return jax.jit(stepped)

@@ -1,0 +1,154 @@
+"""shard_map gossip: the MATCHA mixing step as ppermute exchanges.
+
+One MATCHA iteration applies the mixing matrix (paper eq. 2-3)
+
+    W^(k) = I - alpha * sum_j B_j^(k) L_j
+
+where L_j is the Laplacian of matching j and B_j^(k) the Bernoulli
+activation. Because every matching is a set of vertex-disjoint edges,
+its permutation is an involution: applying W^(k) to node i's parameters
+is exactly
+
+    x_i <- x_i + alpha * sum_{active j} (x_{pi_j(i)} - x_i)
+
+i.e. one ``ppermute`` per matching (fixed points exchange with
+themselves, contributing zero) followed by a single fused elementwise
+consensus update, which is routed through the Pallas gossip-axpy kernel
+in ``repro.kernels.ops`` (interpret mode on CPU).
+
+Everything here runs *inside* a ``jax.shard_map`` body whose manual
+axes are the node axes (single-axis ``("data",)`` meshes or multi-pod
+``("pod", "data")`` meshes — ppermute pairs index the collapsed axis in
+row-major order). ``mix_dense`` is the O(m^2) oracle used by tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeAxisInfo:
+    """Which mesh axes the decentralized nodes live on."""
+
+    axis_names: Tuple[str, ...]
+    num_nodes: int
+
+    @property
+    def axis_name(self) -> Union[str, Tuple[str, ...]]:
+        """ppermute axis arg: bare name for one axis, tuple when the
+        node index is the row-major collapse of several axes."""
+        if len(self.axis_names) == 1:
+            return self.axis_names[0]
+        return tuple(self.axis_names)
+
+
+def _is_float(x) -> bool:
+    return jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+
+
+def _pairs(perm: np.ndarray) -> list:
+    """(source, dest) ppermute pairs of one matching involution.
+
+    Fixed points map to themselves so every destination is named
+    exactly once (ppermute zero-fills unnamed destinations)."""
+    return [(i, int(perm[i])) for i in range(len(perm))]
+
+
+# ---------------------------------------------------------------------------
+# Dense oracle
+# ---------------------------------------------------------------------------
+def mix_dense(stacked: PyTree, W: jax.Array) -> PyTree:
+    """Apply a dense mixing matrix to node-stacked leaves: out_i = sum_j
+    W[i, j] x_j (fp32 accumulation). Reference path for tests and for
+    meshes too small to bother with collectives."""
+
+    def leaf(a):
+        if not _is_float(a):
+            return a
+        out = jnp.einsum(
+            "ij,j...->i...", W.astype(jnp.float32), a.astype(jnp.float32)
+        )
+        return out.astype(a.dtype)
+
+    return jax.tree.map(leaf, stacked)
+
+
+# ---------------------------------------------------------------------------
+# shard_map matchings gossip
+# ---------------------------------------------------------------------------
+def mix_matchings(
+    local: PyTree,
+    alpha: float,
+    permutations: np.ndarray,            # (M, m) involutions
+    active: Sequence[int],
+    info: NodeAxisInfo,
+    *,
+    impl: str = "auto",
+) -> PyTree:
+    """Static-activation gossip: x + alpha * sum_{j in active} (pi_j(x) - x).
+
+    ``active`` is baked into the executable (one compile per distinct
+    activated subset — the "static" train-step mode)."""
+    active = tuple(int(j) for j in active)
+    if not active:
+        return local
+    name = info.axis_name
+    pair_lists = [_pairs(np.asarray(permutations[j])) for j in active]
+    k = float(len(active))
+
+    def partner_target(x):
+        if not _is_float(x):
+            return x
+        acc = None
+        for pairs in pair_lists:
+            p = jax.lax.ppermute(x, name, pairs).astype(jnp.float32)
+            acc = p if acc is None else acc + p
+        # y with x + alpha*(y - x) == x + alpha * sum_j (partner_j - x)
+        return acc - (k - 1.0) * x.astype(jnp.float32)
+
+    targets = jax.tree.map(partner_target, local)
+    return ops.gossip_apply(local, targets, float(alpha), impl=impl)
+
+
+def mix_matchings_masked(
+    local: PyTree,
+    alpha: float,
+    permutations: np.ndarray,            # (M, m) involutions
+    bits: jax.Array,                     # (M,) float activation bits (traced)
+    info: NodeAxisInfo,
+    *,
+    impl: str = "auto",
+) -> PyTree:
+    """Masked gossip: every matching's exchange runs, each delta scaled
+    by its (traced) activation bit — one executable for the whole
+    a-priori schedule instead of one per activated subset."""
+    name = info.axis_name
+    num = int(np.asarray(permutations).shape[0])
+    pair_lists = [_pairs(np.asarray(permutations[j])) for j in range(num)]
+
+    def partner_target(x):
+        if not _is_float(x):
+            return x
+        xf = x.astype(jnp.float32)
+        delta = jnp.zeros_like(xf)
+        for j, pairs in enumerate(pair_lists):
+            p = jax.lax.ppermute(x, name, pairs)
+            delta = delta + bits[j].astype(jnp.float32) * (
+                p.astype(jnp.float32) - xf
+            )
+        # y with x + alpha*(y - x) == x + alpha * sum_j b_j (partner_j - x)
+        # (kept fp32 like the static path: rounding the target to x.dtype
+        # here would make masked and static modes diverge for bf16 params)
+        return xf + delta
+
+    targets = jax.tree.map(partner_target, local)
+    return ops.gossip_apply(local, targets, float(alpha), impl=impl)

@@ -1,0 +1,99 @@
+"""Serving runtime: prefill/decode step builders + cache shardings.
+
+The step functions close over a ``ShardingRules`` object and run the
+model's ``serve_forward`` under ``use_rules`` so every logical ``shard``
+constraint resolves against the serving mesh (batch over data axes,
+weights/KV-heads tensor-parallel over "model"). Callers jit them;
+``repro.launch.dryrun`` lowers them at production shapes.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro.dist import sharding as shd
+
+PyTree = Any
+
+
+def make_prefill_step(model, rules: shd.ShardingRules, *, max_len: int):
+    """(params, tokens(B,S), caches, [encoder_frames|prefix_embeddings])
+    -> (logits(B,1,V), caches)."""
+
+    def step(params, tokens, caches, *, encoder_frames=None,
+             prefix_embeddings=None):
+        with shd.use_rules(rules):
+            encoder_out = None
+            if encoder_frames is not None:
+                encoder_out = model._encode(params, encoder_frames)
+            return model.serve_forward(
+                params, tokens, caches,
+                start_position=0,
+                encoder_out=encoder_out,
+                prefix_embeddings=prefix_embeddings,
+                max_len=max_len,
+            )
+
+    return step
+
+
+def make_decode_step(model, rules: shd.ShardingRules, *, max_len: int):
+    """(params, tokens(B,1), caches, start_position) -> (logits, caches)."""
+
+    def step(params, tokens, caches, start_position):
+        with shd.use_rules(rules):
+            return model.serve_forward(
+                params, tokens, caches,
+                start_position=start_position,
+                max_len=max_len,
+            )
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Abstract state + shardings (dry-run / placement)
+# ---------------------------------------------------------------------------
+def param_shardings(model, rules: shd.ShardingRules) -> PyTree:
+    """Per-parameter PartitionSpecs for a (non-stacked) serving replica."""
+    return shd.param_pspecs(model.logical_axes(), rules)
+
+
+def abstract_caches(model, batch: int, max_len: int) -> PyTree:
+    """ShapeDtypeStruct pytree of ``model.init_cache`` (zero allocation)."""
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+
+# logical axes per cache leaf, keyed by the leaf's dict key. All caches
+# are stacked per segment, so dim 0 is always the layer dim.
+_CACHE_AXES = {
+    "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "pos": ("layers", "batch", None),
+    "ssm": ("layers", "batch", "ssm_heads", None, None),
+    "conv": ("layers", "batch", None, None),
+}
+
+
+def cache_shardings(model, rules: shd.ShardingRules,
+                    caches_abs: Optional[PyTree] = None) -> PyTree:
+    """PartitionSpec per cache leaf (same tree structure as the caches).
+
+    KV caches shard over batch (+ kv-heads / kv-seq when the rules map
+    them); mamba recurrent state shards over batch (+ ssm heads)."""
+    if caches_abs is None:
+        caches_abs = abstract_caches(model, 1, 2)
+
+    def leaf_spec(path, leaf):
+        key = None
+        for part in reversed(path):
+            if isinstance(part, jax.tree_util.DictKey):
+                key = str(part.key)
+                break
+        axes = _CACHE_AXES.get(key)
+        if axes is None or len(axes) != len(leaf.shape):
+            axes = ("layers",) + (None,) * (len(leaf.shape) - 1)
+        return shd.logical_to_pspec(axes, rules, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, caches_abs)

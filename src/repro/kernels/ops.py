@@ -82,18 +82,39 @@ def ssd(
 # ---------------------------------------------------------------------------
 # Gossip consensus update
 # ---------------------------------------------------------------------------
+def _gossip_tree_map(x_tree, partner_tree, alpha: float, mode: str):
+    """Shared leaf dispatcher for the consensus update x + alpha*(y - x).
+    Non-float leaves pass through untouched."""
+    interpret = mode == "interpret" or not _on_tpu()
+
+    def leaf(x, y):
+        if not jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+            return x
+        if mode == "xla":
+            return _ref.gossip_axpy_ref(x, y, alpha)
+        return _ga.gossip_axpy(x, y, alpha, interpret=interpret)
+
+    return jax.tree.map(leaf, x_tree, partner_tree)
+
+
 def gossip_update(x_tree, partner_tree, alpha: float, *, impl: str = "auto"):
     """Tree-wide fused consensus update x + alpha (partner - x)."""
-    mode = _resolve(impl)
-    if mode == "xla":
-        return jax.tree.map(
-            lambda a, b: _ref.gossip_axpy_ref(a, b, alpha), x_tree, partner_tree
-        )
-    interpret = mode == "interpret" or not _on_tpu()
-    return jax.tree.map(
-        lambda a, b: _ga.gossip_axpy(a, b, alpha, interpret=interpret),
-        x_tree,
-        partner_tree,
+    return _gossip_tree_map(x_tree, partner_tree, alpha, _resolve(impl))
+
+
+def gossip_apply(x_tree, target_tree, alpha: float, *, impl: str = "auto"):
+    """Gossip HOT-PATH entry used by ``repro.dist.gossip`` after the
+    ppermute exchanges.
+
+    Unlike ``gossip_update`` (whose "auto" falls back to the jnp
+    reference off-TPU), the hot path always runs the fused Pallas
+    gossip-axpy — compiled on TPU, ``interpret=True`` on CPU — so the
+    kernel is exercised by every decentralized train step and stays
+    validated against ``repro.kernels.ref.gossip_axpy_ref`` in situ.
+    Pass ``impl="xla"`` to force the reference path.
+    """
+    return _gossip_tree_map(
+        x_tree, target_tree, alpha, "pallas" if impl == "auto" else impl
     )
 
 

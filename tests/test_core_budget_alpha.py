@@ -1,6 +1,7 @@
 """Tests for activation-probability optimization (eq. 4) and alpha (Lemma 1)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: property tests skip cleanly
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
