@@ -10,6 +10,10 @@ paper's tables:
   roofline    <- brief SSRoofline (dry-run derived terms)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--skip convergence]
+
+``--smoke`` runs only the fast analytic benches (spectral, comm_time —
+no model training), suitable for CI; comm_time leaves its
+``BENCH_comm_time.json`` artifact in benchmarks/results/.
 """
 from __future__ import annotations
 
@@ -17,12 +21,18 @@ import argparse
 import sys
 import traceback
 
+SMOKE = ("spectral", "comm_time")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip", nargs="*", default=[])
     ap.add_argument("--only", nargs="*", default=[])
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast analytic benches only (CI)")
     args = ap.parse_args()
+    if args.smoke and not args.only:
+        args.only = list(SMOKE)
 
     from benchmarks import (
         bench_comm_time,

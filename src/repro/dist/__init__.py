@@ -3,7 +3,9 @@
 Layering (low to high):
 
   sharding    logical-axis -> PartitionSpec rules; ``shard`` constraints
-  gossip      per-matching ppermute averaging (W = I - alpha * sum L_j)
+  bucketing   param pytree <-> contiguous fp32 gossip buckets
+  gossip      per-matching ppermute averaging (W = I - alpha * sum L_j),
+              sequential (masked/static) and overlapped (one-step-delayed)
   decen_train stacked per-node state + the decentralized SGD train step
   serve       prefill/decode step functions + cache shardings
 """

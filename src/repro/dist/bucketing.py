@@ -1,0 +1,173 @@
+"""Param-pytree <-> contiguous fp32 gossip buckets.
+
+A model's parameter tree has dozens of small leaves; exchanging each
+leaf with one ``ppermute`` per (matching, leaf) pair issues a swarm of
+tiny collectives whose launch latency dominates the transfer and which
+XLA cannot overlap effectively with compute. Bucketing flattens the
+float leaves into a small number of large contiguous fp32 buffers
+(greedy fill to a byte target, leaves never split across buckets), so
+the overlap gossip mode issues one collective per (matching, bucket)
+and the latency-hiding scheduler has a few big transfers to slide under
+the fwd/bwd matmuls. The same contiguous layout is what an FSDP-style
+sharded-replica mode needs, so the plan is layout metadata only —
+independent of gossip.
+
+``BucketPlan`` is static (shapes/offsets resolved at trace time);
+``ravel``/``unravel`` are pure jnp reshuffles with no host sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+DEFAULT_TARGET_BYTES = 4 << 20   # 4 MiB of fp32 per bucket
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Static layout: which slice of which bucket each float leaf owns.
+
+    Non-float leaves (step counters, rng keys) take no bucket space;
+    their ``leaf_bucket``/``leaf_offset`` entries are -1 and ``unravel``
+    returns ``None`` in their positions.
+    """
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    is_float: Tuple[bool, ...]
+    leaf_bucket: Tuple[int, ...]      # -1 for non-float leaves
+    leaf_offset: Tuple[int, ...]      # -1 for non-float leaves
+    bucket_sizes: Tuple[int, ...]     # elements (fp32) per bucket
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.bucket_sizes)
+
+    @property
+    def total_elements(self) -> int:
+        return sum(self.bucket_sizes)
+
+
+def _leaf_size(shape: Tuple[int, ...]) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+def plan_buckets(
+    tree: PyTree, *, target_bytes: int = DEFAULT_TARGET_BYTES
+) -> BucketPlan:
+    """Greedy contiguous packing of the float leaves of ``tree``.
+
+    ``tree`` may hold concrete arrays or ``ShapeDtypeStruct``s (only
+    ``.shape``/``.dtype`` are read). A leaf opens a new bucket whenever
+    appending it would push the current bucket past ``target_bytes`` of
+    fp32, so no bucket exceeds the target unless a single leaf does; an
+    oversized leaf gets a bucket of its own rather than being split,
+    keeping unravel a pure reshape.
+    """
+    if target_bytes <= 0:
+        raise ValueError(f"target_bytes must be positive, got {target_bytes}")
+    leaves, treedef = jax.tree.flatten(tree)
+    target_elems = max(1, target_bytes // 4)
+
+    shapes, is_float, leaf_bucket, leaf_offset = [], [], [], []
+    bucket_sizes: list = []
+    fill = 0                       # elements in the currently-open bucket
+    for leaf in leaves:
+        shape = tuple(int(d) for d in leaf.shape)
+        shapes.append(shape)
+        floaty = jnp.issubdtype(leaf.dtype, jnp.floating)
+        is_float.append(floaty)
+        if not floaty:
+            leaf_bucket.append(-1)
+            leaf_offset.append(-1)
+            continue
+        size = _leaf_size(shape)
+        if not bucket_sizes or (fill > 0 and fill + size > target_elems):
+            bucket_sizes.append(0)
+            fill = 0
+        leaf_bucket.append(len(bucket_sizes) - 1)
+        leaf_offset.append(fill)
+        bucket_sizes[-1] += size
+        fill += size
+    return BucketPlan(
+        treedef=treedef,
+        shapes=tuple(shapes),
+        is_float=tuple(is_float),
+        leaf_bucket=tuple(leaf_bucket),
+        leaf_offset=tuple(leaf_offset),
+        bucket_sizes=tuple(bucket_sizes),
+    )
+
+
+def _check_structure(plan: BucketPlan, leaves, treedef) -> None:
+    if treedef != plan.treedef:
+        raise ValueError(
+            f"tree structure {treedef} does not match the bucket plan's "
+            f"{plan.treedef}"
+        )
+    for leaf, shape in zip(leaves, plan.shapes):
+        if tuple(leaf.shape) != shape:
+            raise ValueError(
+                f"leaf shape {tuple(leaf.shape)} does not match planned "
+                f"shape {shape}"
+            )
+
+
+def ravel(plan: BucketPlan, tree: PyTree) -> Tuple[jax.Array, ...]:
+    """Pack the float leaves of ``tree`` into fp32 buckets, each a
+    contiguous 1-D ``(bucket_size,)`` array in plan order."""
+    leaves, treedef = jax.tree.flatten(tree)
+    _check_structure(plan, leaves, treedef)
+    parts: list = [[] for _ in range(plan.num_buckets)]
+    for leaf, floaty, b in zip(leaves, plan.is_float, plan.leaf_bucket):
+        if not floaty:
+            continue
+        parts[b].append(jnp.ravel(leaf).astype(jnp.float32))
+    return tuple(
+        jnp.concatenate(p) if len(p) > 1 else p[0] for p in parts
+    )
+
+
+def unravel(
+    plan: BucketPlan,
+    buckets: Tuple[jax.Array, ...],
+    like: Optional[PyTree] = None,
+) -> PyTree:
+    """Inverse of ``ravel``: slice the buckets back into leaf shapes.
+
+    Float leaves come back fp32 (no cast to the original dtype — the
+    gossip consensus path wants the fp32 values; callers cast if they
+    need storage dtype). Non-float positions are filled from ``like``
+    when given, else ``None``.
+    """
+    if len(buckets) != plan.num_buckets:
+        raise ValueError(
+            f"got {len(buckets)} buckets, plan has {plan.num_buckets}"
+        )
+    for bkt, size in zip(buckets, plan.bucket_sizes):
+        if bkt.shape != (size,):
+            raise ValueError(
+                f"bucket shape {bkt.shape} does not match planned ({size},)"
+            )
+    like_leaves = None
+    if like is not None:
+        like_leaves, like_def = jax.tree.flatten(like)
+        _check_structure(plan, like_leaves, like_def)
+    out = []
+    for i, (shape, floaty, b, off) in enumerate(
+        zip(plan.shapes, plan.is_float, plan.leaf_bucket, plan.leaf_offset)
+    ):
+        if not floaty:
+            out.append(like_leaves[i] if like_leaves is not None else None)
+            continue
+        size = _leaf_size(shape)
+        out.append(buckets[b][off:off + size].reshape(shape))
+    return jax.tree.unflatten(plan.treedef, out)

@@ -14,6 +14,12 @@ Gossip modes (paper Section 3.3 execution strategies):
               schedule bits — ONE executable for the whole run
     "static"  the activated subset is baked in — one executable per
               distinct subset, no wasted exchanges
+    "overlap" one-step-delayed bucketed gossip: iteration k's exchange
+              is launched before iteration k's grads are computed and
+              its consensus correction lands at iteration k+1, so the
+              collective overlaps the fwd/bwd compute instead of
+              serializing after it (Wang et al. 2024). Carries an
+              explicit in-flight ``GossipState`` through the step.
     "none"    local SGD only (the no-communication baseline)
 """
 from __future__ import annotations
@@ -28,8 +34,16 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 import repro  # ensures the jax.shard_map compat shim is installed
 from repro.configs.base import ModelConfig
+from repro.dist import bucketing
 from repro.dist import sharding as shd
-from repro.dist.gossip import NodeAxisInfo, mix_matchings, mix_matchings_masked
+from repro.dist.gossip import (
+    NodeAxisInfo,
+    delayed_delta,
+    launch_matchings_masked,
+    mix_matchings,
+    mix_matchings_masked,
+)
+from repro.kernels import ops
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
 
 PyTree = Any
@@ -67,7 +81,9 @@ def make_spec(
     multi_pod: bool = False,
     sequence_parallel: bool = False,
 ) -> DistSpec:
-    num = mesh.shape["data"] * (mesh.shape["pod"] if multi_pod else 1)
+    # Single authority for the node count; raises on a pod-axis mesh
+    # with multi_pod=False (which would silently gossip per-pod only).
+    num = shd.num_nodes(mesh, multi_pod=multi_pod)
     rules = shd.train_rules(
         mesh, cfg, multi_pod=multi_pod, sequence_parallel=sequence_parallel
     )
@@ -150,6 +166,108 @@ def consensus_distance(stacked_params: PyTree):
 
 
 # ---------------------------------------------------------------------------
+# In-flight gossip state (overlap mode)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class GossipState:
+    """The exchange in flight between two train steps (overlap mode).
+
+    ``delta`` holds, per bucket, the pre-combined one-step-delayed
+    consensus correction ``sum_j b_j (pi_j(x_delayed) - x_delayed)`` =
+    ``partner_delayed - x_delayed`` terms summed over the activated
+    matchings — everything the next step needs to apply
+    ``x <- x + alpha * (partner_delayed - x_delayed)``. Combining at
+    launch (the ppermute results must materialize before the step ends
+    regardless) keeps exactly one fp32 param copy per node in flight
+    instead of the send/recv pair.
+
+    Leaves are node-stacked ``(nodes, bucket_size)`` fp32.
+    """
+
+    delta: Tuple[jax.Array, ...]
+
+
+jax.tree_util.register_dataclass(
+    GossipState, data_fields=("delta",), meta_fields=()
+)
+
+
+def param_bucket_plan(
+    model, *, target_bytes: int = bucketing.DEFAULT_TARGET_BYTES
+) -> bucketing.BucketPlan:
+    """Bucket layout of one node's (un-stacked) parameter tree."""
+    abs_local = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    return bucketing.plan_buckets(abs_local, target_bytes=target_bytes)
+
+
+def init_gossip_state(
+    plan, spec: DistSpec, bplan: bucketing.BucketPlan
+) -> GossipState:
+    """Empty in-flight buffer: a zero delta, so the first step's delayed
+    correction is exactly zero."""
+    del plan  # node/bucket layout fully determines the state
+    n = spec.num_nodes
+    return GossipState(
+        delta=tuple(
+            jnp.zeros((n, size), jnp.float32) for size in bplan.bucket_sizes
+        ),
+    )
+
+
+def gossip_state_pspecs(spec: DistSpec, bplan: bucketing.BucketPlan) -> GossipState:
+    """PartitionSpecs matching ``GossipState``: buffers shard over the
+    node axes."""
+    nodes = spec.nodes_axis
+    return GossipState(
+        delta=tuple(P(nodes) for _ in range(bplan.num_buckets))
+    )
+
+
+def _apply_delayed(
+    p: PyTree,
+    delta_buckets: Tuple[jax.Array, ...],
+    bplan: bucketing.BucketPlan,
+    alpha: float,
+) -> PyTree:
+    """Land an in-flight delayed correction on a per-node param tree:
+    ``x <- x + alpha * delta`` through the fused gossip-axpy (the one
+    definition both the train step and the end-of-run flush use — they
+    must stay identical for flushed checkpoints to resume exactly)."""
+    delta_tree = bucketing.unravel(bplan, delta_buckets)
+    target = jax.tree.map(
+        lambda x, d: x if d is None else x.astype(jnp.float32) + d,
+        p, delta_tree,
+    )
+    return ops.gossip_apply(p, target, alpha)
+
+
+def make_gossip_flush(plan, spec: DistSpec, bplan: bucketing.BucketPlan):
+    """Land the exchange still in flight after the last overlap step:
+
+        params = flush(params, gstate)
+
+    Training in overlap mode leaves one delayed correction pending;
+    apply it before checkpointing / evaluating consensus so the final
+    replicas include every exchange the schedule paid for."""
+    nodes_ax = spec.nodes_axis
+    alpha = float(plan.alpha)
+
+    def body(params, gstate):
+        p = jax.tree.map(lambda a: a[0], params)
+        p = _apply_delayed(p, tuple(a[0] for a in gstate.delta), bplan, alpha)
+        return jax.tree.map(lambda a: a[None], p)
+
+    stepped = jax.shard_map(
+        body,
+        mesh=spec.mesh,
+        in_specs=(P(nodes_ax), gossip_state_pspecs(spec, bplan)),
+        out_specs=P(nodes_ax),
+        axis_names=set(spec.node_axes),
+    )
+    return jax.jit(stepped)
+
+
+# ---------------------------------------------------------------------------
 # Train step
 # ---------------------------------------------------------------------------
 def make_train_step(
@@ -161,18 +279,36 @@ def make_train_step(
     gossip_mode: str = "masked",
     active: Sequence[int] = (),
     grad_clip: float = 0.0,
+    bucket_plan: Optional[bucketing.BucketPlan] = None,
 ):
-    """Build the jitted decentralized step:
+    """Build the jitted decentralized step.
+
+    For ``gossip_mode`` in ("masked", "static", "none"):
 
         params, opt_state, losses, metrics = step(params, opt_state,
                                                   batch, bits)
 
+    For ``gossip_mode="overlap"`` the step threads the in-flight
+    exchange (see ``GossipState`` / ``init_gossip_state``):
+
+        params, opt_state, gstate, losses, metrics = step(
+            params, opt_state, gstate, batch, bits)
+
     ``params``/``opt_state`` are node-stacked; ``batch`` leaves are
     (nodes, per_node_batch, ...); ``bits`` is the (M,) float activation
-    row of the a-priori schedule (ignored unless gossip_mode="masked").
+    row of the a-priori schedule (ignored for "static"/"none").
     ``losses``/``metrics`` come back per node, shape (nodes,).
+
+    Overlap body order (one-step-delayed gossip, Wang et al. 2024):
+    first apply the *previous* step's consensus correction
+    ``x <- x + alpha * (partner_delayed - x_delayed)`` through the fused
+    Pallas gossip-axpy, then snapshot the corrected params into
+    contiguous fp32 buckets and launch this step's ppermutes, and only
+    then trace the fwd/bwd — the collectives have no consumer inside the
+    step, so XLA's latency-hiding scheduler can run them concurrently
+    with the dot-products instead of after them.
     """
-    if gossip_mode not in ("masked", "static", "none"):
+    if gossip_mode not in ("masked", "static", "overlap", "none"):
         raise ValueError(f"unknown gossip_mode {gossip_mode!r}")
     info = spec.node_info
     nodes_ax = spec.nodes_axis
@@ -180,11 +316,10 @@ def make_train_step(
     perms = np.asarray(plan.permutations)
     alpha = float(plan.alpha)
     active = tuple(int(j) for j in active)
+    if gossip_mode == "overlap":
+        bplan = bucket_plan or param_bucket_plan(model)
 
-    def body(params, opt_state, batch, bits):
-        # strip the (local size 1) node dim: per-node trees
-        p = jax.tree.map(lambda a: a[0], params)
-        s = jax.tree.map(lambda a: a[0], opt_state)
+    def sgd_half(p, s, batch):
         b = jax.tree.map(lambda a: a[0], batch)
         (loss, metrics), grads = jax.value_and_grad(
             model.loss, has_aux=True
@@ -192,13 +327,50 @@ def make_train_step(
         if grad_clip:
             grads = clip_by_global_norm(grads, grad_clip)
         updates, s = opt.update(grads, s, p)
-        p = apply_updates(p, updates)
+        return apply_updates(p, updates), s, loss, metrics
+
+    expand = lambda t: jax.tree.map(lambda a: a[None], t)
+
+    def body(params, opt_state, batch, bits):
+        # strip the (local size 1) node dim: per-node trees
+        p = jax.tree.map(lambda a: a[0], params)
+        s = jax.tree.map(lambda a: a[0], opt_state)
+        p, s, loss, metrics = sgd_half(p, s, batch)
         if gossip_mode == "masked":
             p = mix_matchings_masked(p, alpha, perms, bits, info)
         elif gossip_mode == "static":
             p = mix_matchings(p, alpha, perms, active, info)
-        expand = lambda t: jax.tree.map(lambda a: a[None], t)
         return expand(p), expand(s), loss[None], expand(metrics)
+
+    def body_overlap(params, opt_state, gstate, batch, bits):
+        p = jax.tree.map(lambda a: a[0], params)
+        s = jax.tree.map(lambda a: a[0], opt_state)
+        # 1. land the delayed correction from the in-flight exchange
+        p = _apply_delayed(p, tuple(a[0] for a in gstate.delta), bplan, alpha)
+        # 2. launch this iteration's exchange on the corrected params;
+        #    the grads below don't consume it, so the collectives (and
+        #    the elementwise combine into the carried delta) overlap the
+        #    fwd/bwd
+        sent = bucketing.ravel(bplan, p)
+        recv = launch_matchings_masked(sent, bits, perms, info)
+        new_delta = delayed_delta(sent, recv, bits)
+        # 3. local SGD on the corrected params
+        p, s, loss, metrics = sgd_half(p, s, batch)
+        new_state = GossipState(delta=tuple(a[None] for a in new_delta))
+        return expand(p), expand(s), new_state, loss[None], expand(metrics)
+
+    if gossip_mode == "overlap":
+        gspecs = gossip_state_pspecs(spec, bplan)
+        stepped = jax.shard_map(
+            body_overlap,
+            mesh=mesh,
+            in_specs=(P(nodes_ax), P(nodes_ax), gspecs, P(nodes_ax), P()),
+            out_specs=(
+                P(nodes_ax), P(nodes_ax), gspecs, P(nodes_ax), P(nodes_ax),
+            ),
+            axis_names=set(spec.node_axes),
+        )
+        return jax.jit(stepped)
 
     stepped = jax.shard_map(
         body,

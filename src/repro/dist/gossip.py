@@ -20,6 +20,13 @@ Everything here runs *inside* a ``jax.shard_map`` body whose manual
 axes are the node axes (single-axis ``("data",)`` meshes or multi-pod
 ``("pod", "data")`` meshes — ppermute pairs index the collapsed axis in
 row-major order). ``mix_dense`` is the O(m^2) oracle used by tests.
+
+``launch_matchings_masked`` / ``delayed_delta`` are the two halves of
+the overlapped (one-step-delayed) execution strategy: exchanges are
+issued on contiguous fp32 buckets (``repro.dist.bucketing``) with no
+consumer in the launching step, and the consensus correction lands one
+iteration later — so the collective hides behind the next step's
+fwd/bwd compute instead of serializing after it.
 """
 from __future__ import annotations
 
@@ -63,6 +70,30 @@ def _pairs(perm: np.ndarray) -> list:
     return [(i, int(perm[i])) for i in range(len(perm))]
 
 
+def _canonical_active(active: Sequence[int], num_matchings: int) -> Tuple[int, ...]:
+    """Dedupe + range-check an activated-matching index set.
+
+    Duplicate ids would double-count that matching's delta (the
+    activation bits are Bernoulli, not multiplicities), and negative ids
+    would silently wrap under numpy indexing — both are caller bugs, so
+    dedupe the former (order-preserving) and raise on the latter."""
+    out = tuple(dict.fromkeys(int(j) for j in active))
+    for j in out:
+        if not 0 <= j < num_matchings:
+            raise ValueError(
+                f"matching id {j} out of range for {num_matchings} matchings"
+            )
+    return out
+
+
+def _check_bits(bits, num_matchings: int) -> None:
+    if tuple(bits.shape) != (num_matchings,):
+        raise ValueError(
+            f"activation bits shape {tuple(bits.shape)} does not match the "
+            f"{num_matchings} matchings in the plan"
+        )
+
+
 # ---------------------------------------------------------------------------
 # Dense oracle
 # ---------------------------------------------------------------------------
@@ -98,7 +129,7 @@ def mix_matchings(
 
     ``active`` is baked into the executable (one compile per distinct
     activated subset — the "static" train-step mode)."""
-    active = tuple(int(j) for j in active)
+    active = _canonical_active(active, int(np.asarray(permutations).shape[0]))
     if not active:
         return local
     name = info.axis_name
@@ -133,6 +164,7 @@ def mix_matchings_masked(
     a-priori schedule instead of one per activated subset."""
     name = info.axis_name
     num = int(np.asarray(permutations).shape[0])
+    _check_bits(bits, num)
     pair_lists = [_pairs(np.asarray(permutations[j])) for j in range(num)]
 
     def partner_target(x):
@@ -152,3 +184,55 @@ def mix_matchings_masked(
 
     targets = jax.tree.map(partner_target, local)
     return ops.gossip_apply(local, targets, float(alpha), impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# Overlapped (one-step-delayed, bucketed) gossip
+# ---------------------------------------------------------------------------
+def launch_matchings_masked(
+    buckets: Sequence[jax.Array],        # fp32 (B_i,) contiguous buckets
+    bits: jax.Array,                     # (M,) float activation bits (traced)
+    permutations: np.ndarray,            # (M, m) involutions
+    info: NodeAxisInfo,
+) -> Tuple[jax.Array, ...]:
+    """Issue this iteration's exchanges on contiguous param buckets and
+    pre-reduce the partners: recv_i = sum_j bits[j] * pi_j(bucket_i).
+
+    This is the *launch* half of the overlap mode: nothing here feeds
+    the surrounding step's loss/grad computation, so XLA's latency-hiding
+    scheduler can run the ppermutes concurrently with the fwd/bwd
+    matmuls traced after it. The result is consumed one step later by
+    ``delayed_delta``.
+    """
+    name = info.axis_name
+    num = int(np.asarray(permutations).shape[0])
+    _check_bits(bits, num)
+    pair_lists = [_pairs(np.asarray(permutations[j])) for j in range(num)]
+    recv = []
+    for bkt in buckets:
+        acc = jnp.zeros_like(bkt)
+        for j, pairs in enumerate(pair_lists):
+            acc = acc + bits[j].astype(jnp.float32) * jax.lax.ppermute(
+                bkt, name, pairs
+            )
+        recv.append(acc)
+    return tuple(recv)
+
+
+def delayed_delta(
+    sent: Sequence[jax.Array],           # buckets snapshotted at launch
+    recv: Sequence[jax.Array],           # launch_matchings_masked output
+    bits: jax.Array,                     # the bits the exchange was launched with
+) -> Tuple[jax.Array, ...]:
+    """Per-bucket one-step-delayed consensus delta:
+
+        delta = sum_j b_j (pi_j(x_delayed) - x_delayed)
+              = recv - (sum_j b_j) * sent
+
+    Applying ``x <- x + alpha * delta`` (via ``ops.gossip_apply`` with
+    target ``x + delta``) is the delayed analogue of the masked mode's
+    in-step correction; at consensus every pi_j(x) == x so delta == 0
+    and the fixed points coincide.
+    """
+    ksum = jnp.sum(bits.astype(jnp.float32))
+    return tuple(r - ksum * s for s, r in zip(sent, recv))

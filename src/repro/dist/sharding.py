@@ -140,6 +140,38 @@ def named_shardings(pspec_tree: PyTree, mesh: Mesh) -> PyTree:
 
 
 # ---------------------------------------------------------------------------
+# Node count
+# ---------------------------------------------------------------------------
+def num_nodes(mesh: Mesh, *, multi_pod: bool) -> int:
+    """Decentralized node count of ``mesh`` — the single authority every
+    layer (specs, gossip, launchers, dryrun) must agree with.
+
+    Raises on a mesh/flag mismatch instead of letting a ``pod``-axis
+    mesh with ``multi_pod=False`` silently train on only the ``data``
+    slice of the nodes (each pod would gossip within itself and the
+    replicas would never mix across pods).
+    """
+    has_pod = "pod" in mesh.axis_names
+    if multi_pod and not has_pod:
+        raise ValueError(
+            f"multi_pod=True but mesh axes {tuple(mesh.axis_names)} have no "
+            "'pod' axis"
+        )
+    if has_pod and not multi_pod:
+        raise ValueError(
+            f"mesh has a 'pod' axis ({tuple(mesh.axis_names)}) but "
+            "multi_pod=False: this would silently run on "
+            f"{mesh.shape['data']} of "
+            f"{mesh.shape['data'] * mesh.shape['pod']} nodes — pass "
+            "multi_pod=True or use a pod-less mesh"
+        )
+    n = mesh.shape["data"]
+    if multi_pod:
+        n *= mesh.shape["pod"]
+    return n
+
+
+# ---------------------------------------------------------------------------
 # Config-aware rule construction
 # ---------------------------------------------------------------------------
 def rules_for_config(

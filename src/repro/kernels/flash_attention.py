@@ -38,6 +38,7 @@ def _flash_kernel(
     *,
     causal: bool,
     window: int,
+    kv_len: int,
     sm_scale: float,
     block_q: int,
     block_k: int,
@@ -65,6 +66,8 @@ def _flash_kernel(
     if window:
         q_first = iq * block_q
         live = jnp.logical_and(live, q_first - k_last < window)
+    if kv_len:
+        live = jnp.logical_and(live, k_first < kv_len)   # pad-only tile
 
     @pl.when(live)
     def _compute():
@@ -80,6 +83,11 @@ def _flash_kernel(
             mask = jnp.logical_and(mask, k_pos <= q_pos)
         if window:
             mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        if kv_len:
+            # padded keys beyond the true kv length must not contribute
+            # softmax mass (causal masking only hides them by accident,
+            # and only for self-attention-sized queries)
+            mask = jnp.logical_and(mask, k_pos < kv_len)
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_scratch[...]                             # (bq, 1)
@@ -109,10 +117,14 @@ def flash_attention(
     *,
     causal: bool = True,
     window: int = 0,
+    kv_len: int = 0,
     block_q: int = 128,
     block_k: int = 128,
     interpret: bool = True,
 ) -> jax.Array:
+    """``kv_len > 0`` marks keys/values at positions >= kv_len as
+    padding to be masked out (callers that pad Sk up to a block
+    multiple pass the true length here)."""
     B, Sq, Hq, hd = q.shape
     _, Sk, Hkv, _ = k.shape
     group = Hq // Hkv
@@ -120,6 +132,8 @@ def flash_attention(
     block_k = min(block_k, Sk)
     if Sq % block_q or Sk % block_k:
         raise ValueError("sequence lengths must divide block sizes (pad in ops)")
+    if kv_len < 0 or kv_len > Sk:
+        raise ValueError(f"kv_len {kv_len} out of range for Sk={Sk}")
     nq, nk = Sq // block_q, Sk // block_k
     sm_scale = 1.0 / np.sqrt(hd)
 
@@ -127,6 +141,7 @@ def flash_attention(
         _flash_kernel,
         causal=causal,
         window=window,
+        kv_len=0 if kv_len == Sk else kv_len,   # 0: no pad to mask
         sm_scale=sm_scale,
         block_q=block_q,
         block_k=block_k,

@@ -50,12 +50,17 @@ def attention(
     pad_q = (-Sq) % bq
     pad_k = (-Sk) % bk
     if pad_q or pad_k:
-        # pad keys as masked-out future positions; pad queries then slice
+        # pad q/k/v up to block multiples; padded queries are sliced off
+        # below and padded keys are masked inside the kernel via kv_len
+        # (causal masking alone only hides them for self-attention —
+        # with causal=False or a window they would leak exp(0) mass
+        # into the softmax denominator)
         q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
         k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
     out = _fa.flash_attention(
         q, k, v, causal=causal, window=window,
+        kv_len=Sk if pad_k else 0,
         block_q=bq, block_k=bk, interpret=interpret,
     )
     return out[:, :Sq] if pad_q else out

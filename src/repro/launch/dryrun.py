@@ -177,7 +177,7 @@ def build_serve(cfg: ModelConfig, shape: InputShape, mesh, multi_pod: bool,
     if shape.name == "long_500k":
         cfg, note = long_context_variant(cfg)
     model = Model(cfg)
-    data_size = mesh.shape["data"] * (mesh.shape["pod"] if multi_pod else 1)
+    data_size = num_nodes(mesh, multi_pod=multi_pod)
     batch_shardable = shape.global_batch % data_size == 0
     rules = shd.serve_rules(mesh, cfg, multi_pod=multi_pod,
                             kv_seq_sharded=kv_seq_shard)

@@ -25,8 +25,6 @@ def make_test_mesh(*, nodes: int = 4, model: int = 2, multi_pod: bool = False):
     return jax.make_mesh((nodes, model), ("data", "model"))
 
 
-def num_nodes(mesh, *, multi_pod: bool) -> int:
-    n = mesh.shape["data"]
-    if multi_pod:
-        n *= mesh.shape["pod"]
-    return n
+# Re-export: the node-count authority lives at the dist layer (launch
+# sits on top of repro.dist, never the other way around).
+from repro.dist.sharding import num_nodes  # noqa: E402,F401

@@ -1,0 +1,110 @@
+"""Bucketing layout: ravel/unravel round trips, greedy packing, and
+validation — plus the mix_matchings input-validation contract (these
+run on a single device; execution parity lives in test_gossip_parity)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist import bucketing
+from repro.dist.gossip import NodeAxisInfo, mix_matchings, mix_matchings_masked
+
+
+def _tree(key=0):
+    ks = jax.random.split(jax.random.key(key), 4)
+    return {
+        "w": jax.random.normal(ks[0], (33, 7)),
+        "b": jax.random.normal(ks[1], (129,), jnp.bfloat16),
+        "nested": {
+            "emb": jax.random.normal(ks[2], (64, 16)),
+            "step": jnp.asarray(3, jnp.int32),        # non-float
+            "scale": jax.random.normal(ks[3], ()),
+        },
+    }
+
+
+def test_ravel_unravel_round_trip():
+    tree = _tree()
+    plan = bucketing.plan_buckets(tree)
+    buckets = bucketing.ravel(plan, tree)
+    assert sum(b.size for b in buckets) == plan.total_elements
+    for b in buckets:
+        assert b.dtype == jnp.float32 and b.ndim == 1
+    back = bucketing.unravel(plan, buckets, like=tree)
+    for got, want in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=1e-6, rtol=1e-6,
+        )
+
+
+def test_unravel_without_like_fills_none_for_nonfloat():
+    tree = _tree()
+    plan = bucketing.plan_buckets(tree)
+    back = bucketing.unravel(plan, bucketing.ravel(plan, tree))
+    assert back["nested"]["step"] is None
+    assert back["w"].dtype == jnp.float32
+
+
+def test_greedy_packing_respects_target_and_never_splits_leaves():
+    tree = {f"l{i}": jnp.zeros((100,)) for i in range(10)}
+    # 100 fp32 = 400 B per leaf; 1000 B target = 250 elements -> a third
+    # leaf would overflow, so two leaves per bucket
+    plan = bucketing.plan_buckets(tree, target_bytes=1000)
+    assert plan.num_buckets == 5
+    assert plan.bucket_sizes == (200,) * 5
+    # an oversized leaf lands alone in exactly one bucket, never shared
+    # with the small leaves around it
+    plan2 = bucketing.plan_buckets(
+        {"a": jnp.zeros((10,)), "big": jnp.zeros((10_000,)),
+         "z": jnp.zeros((10,))},
+        target_bytes=1000)
+    assert plan2.bucket_sizes == (10, 10_000, 10)
+
+
+def test_plan_works_on_abstract_shapes():
+    abs_tree = jax.eval_shape(lambda: _tree())
+    plan = bucketing.plan_buckets(abs_tree)
+    concrete = bucketing.ravel(plan, _tree())
+    assert tuple(b.shape[0] for b in concrete) == plan.bucket_sizes
+
+
+def test_ravel_rejects_mismatched_tree():
+    tree = _tree()
+    plan = bucketing.plan_buckets(tree)
+    wrong = dict(tree)
+    wrong["w"] = jnp.zeros((5, 5))
+    with pytest.raises(ValueError, match="shape"):
+        bucketing.ravel(plan, wrong)
+    with pytest.raises(ValueError, match="buckets"):
+        bucketing.unravel(plan, ())
+
+
+# ---------------------------------------------------------------------------
+# mix_matchings validation (raises happen before any collective, so no
+# multi-device mesh is needed)
+# ---------------------------------------------------------------------------
+def _perms(m=4):
+    # two disjoint matchings on 4 nodes: (01)(23) and (12)(03)
+    return np.asarray([[1, 0, 3, 2], [3, 2, 1, 0]])
+
+
+def test_mix_matchings_empty_active_is_identity():
+    info = NodeAxisInfo(axis_names=("data",), num_nodes=4)
+    x = {"w": jnp.ones((3,))}
+    assert mix_matchings(x, 0.5, _perms(), (), info) is x
+
+
+@pytest.mark.parametrize("bad", [(2,), (-1,), (0, 5)])
+def test_mix_matchings_rejects_out_of_range_ids(bad):
+    info = NodeAxisInfo(axis_names=("data",), num_nodes=4)
+    with pytest.raises(ValueError, match="out of range"):
+        mix_matchings({"w": jnp.ones((3,))}, 0.5, _perms(), bad, info)
+
+
+def test_mix_matchings_masked_rejects_wrong_bits_length():
+    info = NodeAxisInfo(axis_names=("data",), num_nodes=4)
+    with pytest.raises(ValueError, match="bits shape"):
+        mix_matchings_masked(
+            {"w": jnp.ones((3,))}, 0.5, _perms(), jnp.ones((3,)), info
+        )

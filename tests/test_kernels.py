@@ -62,6 +62,32 @@ def test_flash_attention_padding_wrapper():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
 
 
+@pytest.mark.parametrize("causal,window", [(False, 0), (False, 24), (True, 24)])
+@pytest.mark.parametrize("Sq,Sk", [(100, 100), (64, 100), (37, 130)])
+def test_flash_attention_pad_masking_parity(Sq, Sk, causal, window):
+    """Padded K/V positions must carry zero softmax mass.
+
+    With causal=False (and with window set) only an explicit kv_len
+    mask hides the pad — exp(0)=1 leaks into the denominator otherwise.
+    Non-multiple-of-block lengths force the padded path."""
+    ks = jax.random.split(jax.random.key(3), 3)
+    B, H, hd = 2, 4, 32
+    q = jax.random.normal(ks[0], (B, Sq, H, hd))
+    k = jax.random.normal(ks[1], (B, Sk, H, hd))
+    v = jax.random.normal(ks[2], (B, Sk, H, hd))
+    got = ops.attention(q, k, v, causal=causal, window=window,
+                        impl="interpret", block_q=64, block_k=64)
+    want = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_kv_len_rejects_bad_range():
+    q = jnp.zeros((1, 64, 2, 32))
+    with pytest.raises(ValueError, match="kv_len"):
+        flash_attention(q, q, q, kv_len=65, interpret=True)
+
+
 def test_flash_attention_fully_masked_rows_are_finite():
     """window smaller than block: early rows of late blocks fully masked."""
     ks = jax.random.split(jax.random.key(2), 3)
