@@ -13,6 +13,13 @@ Execution-strategy cost model: sequential gossip (masked/static) pays
 pays ``max(comm(k), compute)`` — the exchange hides behind the next
 step's fwd/bwd. Both are reported per comm budget and the full result
 set lands in ``BENCH_comm_time.json`` (the CI smoke artifact).
+
+FSDP composition: the sharded-replica mode (``repro.dist.fsdp``) keeps
+1/S of every fp32 bucket per device and gossips the shards directly, so
+per-device param bytes AND per-matching gossip bytes both shrink by the
+shard factor — the ``fsdp`` section of the artifact tabulates both from
+the real bucket layout of the smoke model, and the smoke job asserts
+the shrink.
 """
 from __future__ import annotations
 
@@ -40,6 +47,43 @@ def step_time_model(plan, *, steps: int = 2000, seed: int = 0) -> dict:
         sequential=float(sequential.mean()),
         overlapped=float(overlapped.mean()),
     )
+
+
+def fsdp_bytes_table(
+    arch: str = "internlm2_1_8b", shard_factors=(1, 2, 4)
+) -> list:
+    """Per-device param bytes and per-matching gossip bytes at each
+    shard factor, from the actual fsdp bucket layout (``pad_to=S``) of
+    the smoke model — abstract shapes only, nothing is allocated."""
+    import jax  # local: the analytic benches must not force a jax init
+
+    from repro.configs.registry import get_smoke_config
+    from repro.dist import bucketing
+    from repro.models.transformer import Model
+
+    model = Model(get_smoke_config(arch))
+    abs_local = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    raw_bytes = 4 * int(
+        sum(np.prod(l.shape) for l in jax.tree.leaves(abs_local))
+    )
+    rows = []
+    for s in shard_factors:
+        bplan = bucketing.plan_buckets(abs_local, pad_to=s)
+        per_device = bplan.total_elements // s * 4
+        # one matching's ppermute sends each node's local slice of every
+        # bucket exactly once (equal to the per-device resident bytes in
+        # this design, but accounted per bucket so the two can diverge
+        # if the cost model ever does)
+        per_matching = 4 * sum(sz // s for sz in bplan.bucket_sizes)
+        rows.append(dict(
+            arch=arch,
+            shard=int(s),
+            raw_param_bytes=raw_bytes,
+            padded_param_bytes=bplan.total_elements * 4,
+            per_device_param_bytes=int(per_device),
+            per_matching_comm_bytes=int(per_matching),
+        ))
+    return rows
 
 
 def per_node_comm_time(plan) -> np.ndarray:
@@ -115,6 +159,21 @@ def run(out_dir: str = "benchmarks/results"):
     mp = plans[0.02]
     ratio = van.vanilla_comm_units / max(mp.expected_comm_units, 1e-9)
     checks.append((f"CB=0.02 delay reduction {ratio:.0f}x >= 40x", ratio >= 40))
+
+    # fsdp composition: per-device bytes shrink by the shard factor
+    # (padding to shard-divisible bucket sizes costs < 1%)
+    fsdp_rows = fsdp_bytes_table()
+    by_shard = {r["shard"]: r for r in fsdp_rows}
+    for s in (2, 4):
+        for field, label in (
+            ("per_device_param_bytes", "per-device param bytes"),
+            ("per_matching_comm_bytes", "per-matching gossip bytes"),
+        ):
+            checks.append((
+                f"fsdp shard={s}: {label} {by_shard[s][field]} <= "
+                f"replica/{s} + 1% pad",
+                by_shard[s][field] * s <= by_shard[1][field] * 1.01,
+            ))
     us = (time.time() - t0) * 1e6 / max(len(rows), 1)
 
     # machine-readable artifact for the CI benchmarks smoke job
@@ -123,6 +182,7 @@ def run(out_dir: str = "benchmarks/results"):
             dict(
                 per_node=rows,
                 step_time=step_rows,
+                fsdp=fsdp_rows,
                 checks=[dict(name=n, ok=bool(ok)) for n, ok in checks],
             ),
             f, indent=2,

@@ -13,15 +13,44 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--skip convergence]
 
 ``--smoke`` runs only the fast analytic benches (spectral, comm_time —
 no model training), suitable for CI; comm_time leaves its
-``BENCH_comm_time.json`` artifact in benchmarks/results/.
+``BENCH_comm_time.json`` artifact in benchmarks/results/ and ``--smoke``
+additionally re-reads the artifact to assert the fsdp sharded config
+shrank per-device param bytes by the shard factor.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
 
 SMOKE = ("spectral", "comm_time")
+
+
+def _assert_fsdp_shrink(path: str) -> bool:
+    """Smoke gate: the artifact must carry passing fsdp shrink verdicts
+    (the inequality itself is encoded once, in bench_comm_time.run's
+    checks — this re-reads what was actually written to disk). Returns
+    True on pass."""
+    with open(path) as f:
+        artifact = json.load(f)
+    by_shard = {r["shard"]: r for r in artifact["fsdp"]}
+    fsdp_checks = [
+        c for c in artifact["checks"] if c["name"].startswith("fsdp shard=")
+    ]
+    ok = len(fsdp_checks) >= 2
+    for c in fsdp_checks:
+        ok = ok and c["ok"]
+        print(f"  [{'PASS' if c['ok'] else 'FAIL'}] artifact: {c['name']}",
+              file=sys.stderr)
+    print(
+        "  per-device param bytes by shard: "
+        + str({s: r["per_device_param_bytes"]
+               for s, r in sorted(by_shard.items())}),
+        file=sys.stderr,
+    )
+    return ok
 
 
 def main() -> None:
@@ -65,6 +94,15 @@ def main() -> None:
         except Exception:
             failed = True
             print(f"{name},nan,ERROR")
+            traceback.print_exc()
+    if args.smoke and "comm_time" in args.only and "comm_time" not in args.skip:
+        artifact = os.path.join("benchmarks", "results",
+                                "BENCH_comm_time.json")
+        try:
+            if not _assert_fsdp_shrink(artifact):
+                failed = True
+        except Exception:
+            failed = True
             traceback.print_exc()
     if failed:
         sys.exit(1)

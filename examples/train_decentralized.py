@@ -23,12 +23,21 @@ ap.add_argument("--budget", type=float, default=0.5)
 ap.add_argument("--mode", default="matcha",
                 choices=("matcha", "vanilla", "periodic"))
 ap.add_argument("--gossip-mode", default="masked",
-                choices=("masked", "overlap"),
-                help="masked: in-step exchange; overlap: one-step-delayed "
-                     "bucketed gossip hidden behind the fwd/bwd")
+                choices=("masked", "sequential", "overlap"),
+                help="masked/sequential: in-step exchange; overlap: "
+                     "one-step-delayed bucketed gossip hidden behind the "
+                     "fwd/bwd")
+ap.add_argument("--shard", type=int, default=1,
+                help="FSDP shard factor: each node keeps 1/N of the params "
+                     "and optimizer state (repro.dist.fsdp)")
 args = ap.parse_args()
+if args.gossip_mode == "sequential":
+    args.gossip_mode = "masked"   # same execution; keeps the branches below binary
 
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ.setdefault(
+    "XLA_FLAGS",
+    f"--xla_force_host_platform_device_count={8 * args.shard}",
+)
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +47,7 @@ from repro.configs.base import ModelConfig
 from repro.core import paper_figure1_graph, plan_matcha, plan_periodic, plan_vanilla
 from repro.data.pipeline import DecentralizedBatches
 from repro.dist import decen_train as dt
+from repro.dist import fsdp
 from repro.dist import sharding as shd
 from repro.models.transformer import Model
 from repro.optim.optimizers import sgd
@@ -78,29 +88,68 @@ sched = plan.schedule(steps, seed=0)
 print(f"{args.mode}: M={plan.num_matchings} alpha={plan.alpha:.3f} "
       f"rho={plan.rho:.4f} E[comm]={plan.expected_comm_units:.2f}u/iter")
 
-mesh = jax.make_mesh((8, 1), ("data", "model"))
+if args.shard > 1:
+    if batch_per_node % args.shard:
+        raise SystemExit(f"batch_per_node {batch_per_node} must divide by "
+                         f"--shard {args.shard}")
+    mesh = jax.make_mesh((8, args.shard, 1), ("data", "shard", "model"))
+else:
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
 spec = dt.make_spec(mesh, cfg, multi_pod=False)
 opt = sgd(0.15 if args.scale == "tiny" else 0.05, momentum=0.9)
-params = dt.init_stacked_params(model, spec, seed=0)
-opt_state = dt.init_stacked_opt_state(opt, model, spec)
-pspecs = dt.stacked_param_shardings(model, spec)
+layout = None
+if args.shard > 1:
+    layout = fsdp.make_layout(model, spec)
+    params = fsdp.init_fsdp_params(model, layout, seed=0)
+    opt_state = fsdp.init_fsdp_opt_state(opt, layout)
+    pspecs = fsdp.fsdp_param_pspecs(spec, layout)
+    print(f"fsdp shard={args.shard}: "
+          f"{layout.per_device_elements * 4 / 1e6:.2f} MB params/device "
+          f"(replica: {layout.plan.total_elements * 4 / 1e6:.2f} MB)")
+else:
+    params = dt.init_stacked_params(model, spec, seed=0)
+    opt_state = dt.init_stacked_opt_state(opt, model, spec)
+    pspecs = dt.stacked_param_shardings(model, spec)
 data = DecentralizedBatches(cfg, 8, batch_per_node, seq, seed=0)
 it = iter(data)
+
+
+def eval_params(p):
+    """Full stacked replicas (checkpointing only — O(model)/node)."""
+    return fsdp.gather_params(layout, p) if args.shard > 1 else p
+
+
+def consensus(p):
+    if args.shard > 1:
+        return fsdp.consensus_distance_sharded(p)
+    return dt.consensus_distance(p)
+
 
 losses_hist = []
 sim_time = 0.0
 gstate = None
 if args.gossip_mode == "overlap":
-    bplan = dt.param_bucket_plan(model)
-    gstate = dt.init_gossip_state(plan, spec, bplan)
+    if args.shard > 1:
+        gstate = fsdp.init_fsdp_gossip_state(layout)
+        bplan = layout.plan
+    else:
+        bplan = dt.param_bucket_plan(model)
+        gstate = dt.init_gossip_state(plan, spec, bplan)
     print(f"overlap gossip: {bplan.num_buckets} bucket(s), "
           f"{bplan.total_elements/1e6:.2f}M fp32 elements in flight")
 with jax.set_mesh(mesh):
     params = jax.device_put(params, shd.named_shardings(pspecs, mesh))
-    step = dt.make_train_step(
-        model, opt, plan, spec, gossip_mode=args.gossip_mode, grad_clip=1.0,
-        bucket_plan=bplan if args.gossip_mode == "overlap" else None,
-    )
+    if args.shard > 1:
+        step = fsdp.make_fsdp_train_step(
+            model, opt, plan, spec, layout,
+            gossip_mode=args.gossip_mode, grad_clip=1.0,
+        )
+    else:
+        step = dt.make_train_step(
+            model, opt, plan, spec, gossip_mode=args.gossip_mode,
+            grad_clip=1.0,
+            bucket_plan=bplan if args.gossip_mode == "overlap" else None,
+        )
     for k in range(steps):
         bits = jnp.asarray(sched.activations[k].astype(np.float32))
         if args.gossip_mode == "overlap":
@@ -118,17 +167,26 @@ with jax.set_mesh(mesh):
             l = float(jnp.mean(losses))
             losses_hist.append(l)
             print(f"step {k:4d} loss {l:.4f} "
-                  f"consensus {float(dt.consensus_distance(params)):.2e} "
+                  f"consensus {float(consensus(params)):.2e} "
                   f"sim_time {sim_time:.0f}u")
 
     if args.gossip_mode == "overlap":
         # land the exchange still in flight from the last step
-        params = dt.make_gossip_flush(plan, spec, bplan)(params, gstate)
+        if args.shard > 1:
+            params = fsdp.make_fsdp_gossip_flush(plan, spec, layout)(
+                params, gstate)
+        else:
+            params = dt.make_gossip_flush(plan, spec, bplan)(params, gstate)
         print(f"flushed in-flight gossip: consensus "
-              f"{float(dt.consensus_distance(params)):.2e}")
+              f"{float(consensus(params)):.2e}")
 
 assert losses_hist[-1] < losses_hist[0], "loss must decrease"
 ckpt_dir = os.path.join("checkpoints", f"{cfg.name}-{args.mode}")
-ckpt_lib.save_run(ckpt_dir, params, opt_state, step=steps)
+if args.shard > 1:
+    ckpt_lib.save_run(ckpt_dir, eval_params(params),
+                      fsdp.gather_opt_state(layout, opt_state), step=steps,
+                      extra={"shard": args.shard})
+else:
+    ckpt_lib.save_run(ckpt_dir, params, opt_state, step=steps)
 print(f"final loss {losses_hist[-1]:.4f} (from {losses_hist[0]:.4f}); "
       f"checkpoint -> {ckpt_dir}")

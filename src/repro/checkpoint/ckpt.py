@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -103,6 +104,9 @@ def _sidecar(path: str) -> str:
 # ---------------------------------------------------------------------------
 # Decentralized run checkpoints (node-axis-stacked params)
 # ---------------------------------------------------------------------------
+_NODE_FILE = re.compile(r"node_(\d+)\.npz")
+
+
 def save_run(
     directory: str,
     stacked_params: PyTree,          # leaves with leading node axis
@@ -110,11 +114,17 @@ def save_run(
     *,
     step: int,
     per_node_files: bool = False,
+    extra: Optional[dict] = None,    # e.g. {"shard": S} for fsdp runs
 ) -> None:
+    """Checkpoint a stacked run. Sharded (fsdp) runs gather-on-save:
+    the caller passes the gathered stacked layout (see
+    ``repro.dist.fsdp.gather_params``/``gather_opt_state``), so the
+    on-disk format is identical at every shard factor and a checkpoint
+    restores into any mesh."""
     os.makedirs(directory, exist_ok=True)
     meta = {"step": int(step)}
+    num_nodes = int(jax.tree.leaves(stacked_params)[0].shape[0])
     if per_node_files:
-        num_nodes = jax.tree.leaves(stacked_params)[0].shape[0]
         for n in range(num_nodes):
             node_tree = jax.tree.map(lambda a: a[n], stacked_params)
             save(os.path.join(directory, f"node_{n:02d}"), node_tree,
@@ -123,21 +133,60 @@ def save_run(
     else:
         save(os.path.join(directory, "params"), stacked_params, metadata=meta)
         save(os.path.join(directory, "opt_state"), opt_state, metadata=meta)
+    info = {
+        "step": int(step),
+        "per_node_files": per_node_files,
+        "num_nodes": num_nodes,
+    }
+    info.update(extra or {})
     with open(os.path.join(directory, "ckpt.json"), "w") as f:
-        json.dump({"step": int(step), "per_node_files": per_node_files}, f)
+        json.dump(info, f)
+
+
+def _node_files(directory: str, info: dict) -> list:
+    """Per-node checkpoint files in *numeric* node order.
+
+    Lexicographic ordering breaks at >= 100 nodes (``node_100.npz``
+    sorts before ``node_99.npz``), silently restoring params into the
+    wrong node slots — so the index is parsed from the filename, the
+    index set must be exactly 0..n-1, and the count must agree with the
+    node count recorded in ckpt.json."""
+    entries = []
+    for f in os.listdir(directory):
+        m = _NODE_FILE.fullmatch(f)
+        if m:
+            entries.append((int(m.group(1)), f))
+    entries.sort()
+    indices = [i for i, _ in entries]
+    want = info.get("num_nodes")
+    if want is not None and len(entries) != int(want):
+        raise ValueError(
+            f"checkpoint {directory!r} has {len(entries)} per-node files "
+            f"but ckpt.json records num_nodes={want}"
+        )
+    if indices != list(range(len(entries))):
+        raise ValueError(
+            f"per-node checkpoint files are not a contiguous 0..n-1 set "
+            f"in {directory!r}: indices {indices[:8]}..."
+        )
+    return [f for _, f in entries]
 
 
 def restore_run(directory: str) -> Tuple[PyTree, PyTree, int]:
     with open(os.path.join(directory, "ckpt.json")) as f:
         info = json.load(f)
     if info["per_node_files"]:
-        nodes = sorted(
-            f for f in os.listdir(directory)
-            if f.startswith("node_") and f.endswith(".npz")
-        )
+        nodes = _node_files(directory, info)
         trees = [restore(os.path.join(directory, f))[0] for f in nodes]
         params = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
     else:
         params, _ = restore(os.path.join(directory, "params"))
+        if info.get("num_nodes") is not None:
+            got = int(jax.tree.leaves(params)[0].shape[0])
+            if got != int(info["num_nodes"]):
+                raise ValueError(
+                    f"checkpoint {directory!r} stacks {got} nodes but "
+                    f"ckpt.json records num_nodes={info['num_nodes']}"
+                )
     opt_state, _ = restore(os.path.join(directory, "opt_state"))
     return params, opt_state, info["step"]

@@ -44,16 +44,33 @@ class SyntheticCorpus:
             size=(self.num_states, self.vocab_size)
         ) * 2.0
 
-    def sample(self, rng: np.random.Generator, length: int) -> np.ndarray:
+    def sample(
+        self,
+        rng: np.random.Generator,
+        length: int,
+        state_prior: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        """Sample a token stream; ``state_prior`` (num_states,) tilts the
+        chain toward a node's own hidden states (start state drawn from
+        it, every transition row reweighted by it) so per-node priors
+        produce genuinely different stationary token distributions — the
+        non-IID partition. ``None`` keeps the shared (IID) chain."""
         states = np.zeros(length, np.int64)
-        s = rng.integers(self.num_states)
+        if state_prior is None:
+            s = rng.integers(self.num_states)
+        else:
+            s = rng.choice(self.num_states, p=state_prior)
         toks = np.zeros(length, np.int64)
         for t in range(length):
             states[t] = s
             p = np.exp(self.emit_logits[s] - self.emit_logits[s].max())
             p /= p.sum()
             toks[t] = rng.choice(self.vocab_size, p=p)
-            s = rng.choice(self.num_states, p=self.trans[s])
+            trans = self.trans[s]
+            if state_prior is not None:
+                trans = trans * (state_prior + 1e-6)
+                trans = trans / trans.sum()
+            s = rng.choice(self.num_states, p=trans)
         return toks
 
 
@@ -61,12 +78,35 @@ class SyntheticCorpus:
 # Decentralized partitioning
 # ---------------------------------------------------------------------------
 def partition_seeds(
-    num_nodes: int, *, iid: bool = True, seed: int = 0
-) -> np.ndarray:
-    """Per-node stream seeds. Non-IID mode gives each node a distinct
-    hidden-state prior (Dirichlet-skewed local distribution D_i)."""
+    num_nodes: int,
+    *,
+    iid: bool = True,
+    seed: int = 0,
+    num_states: Optional[int] = None,
+    concentration: float = 0.3,
+):
+    """Per-node stream seeds + hidden-state priors.
+
+    Returns ``(seeds, priors)``: ``seeds`` (num_nodes,) int — one
+    independent sample stream per node; ``priors`` — each node's
+    distribution over the corpus's hidden Markov states. IID mode keeps
+    ``priors=None`` (every node samples the shared chain — same D_i);
+    non-IID mode draws one ``Dirichlet(concentration)`` vector per node
+    (num_nodes, num_states), the skewed local distributions D_i the
+    paper partitions with. Low concentration = strong skew.
+    ``num_states`` defaults to the corpus size ``DecentralizedBatches``
+    builds for the mode (8 IID / 4 non-IID).
+    """
+    if num_states is None:
+        num_states = 8 if iid else 4
     rng = np.random.default_rng(seed)
-    return rng.integers(0, 2**31 - 1, size=num_nodes)
+    seeds = rng.integers(0, 2**31 - 1, size=num_nodes)
+    if iid:
+        return seeds, None
+    priors = rng.dirichlet(
+        np.full(num_states, concentration), size=num_nodes
+    )
+    return seeds, priors
 
 
 class DecentralizedBatches:
@@ -89,39 +129,48 @@ class DecentralizedBatches:
         self.corpus = SyntheticCorpus(
             cfg.vocab_size, num_states=8 if iid else 4, seed=seed
         )
-        self.node_rngs = [
-            np.random.default_rng(s)
-            for s in partition_seeds(num_nodes, iid=iid, seed=seed)
-        ]
+        seeds, priors = partition_seeds(
+            num_nodes, iid=iid, seed=seed,
+            num_states=self.corpus.num_states,
+        )
+        self.node_rngs = [np.random.default_rng(s) for s in seeds]
+        self.node_priors = priors          # None for IID
 
     def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
         return self
+
+    def _frontend_stub(self) -> np.ndarray:
+        """Per-(node, batch) stand-in embeddings, drawn fresh from each
+        node's stream rng every batch (a fixed rng(0) here made every
+        batch, node, and step identical — and re-generated them from
+        scratch on every call)."""
+        N, B = self.num_nodes, self.batch_per_node
+        fd = self.cfg.frontend_dim or self.cfg.d_model
+        return np.stack([
+            self.node_rngs[n].normal(size=(B, self.cfg.encoder_seq, fd))
+            for n in range(N)
+        ])
 
     def __next__(self) -> Dict[str, jax.Array]:
         N, B, S = self.num_nodes, self.batch_per_node, self.seq_len
         toks = np.zeros((N, B, S + 1), np.int32)
         for n in range(N):
+            prior = None if self.node_priors is None else self.node_priors[n]
             for b in range(B):
-                toks[n, b] = self.corpus.sample(self.node_rngs[n], S + 1)
+                toks[n, b] = self.corpus.sample(
+                    self.node_rngs[n], S + 1, state_prior=prior
+                )
         batch = {
             "tokens": jnp.asarray(toks[..., :-1]),
             "labels": jnp.asarray(toks[..., 1:]),
         }
         if self.cfg.frontend == "vision":
             batch["prefix_embeddings"] = jnp.asarray(
-                np.random.default_rng(0).normal(
-                    size=(N, B, self.cfg.encoder_seq,
-                          self.cfg.frontend_dim or self.cfg.d_model)
-                ),
-                dtype=jnp.bfloat16,
+                self._frontend_stub(), dtype=jnp.bfloat16
             )
         if self.cfg.frontend == "audio":
             batch["encoder_frames"] = jnp.asarray(
-                np.random.default_rng(0).normal(
-                    size=(N, B, self.cfg.encoder_seq,
-                          self.cfg.frontend_dim or self.cfg.d_model)
-                ),
-                dtype=jnp.bfloat16,
+                self._frontend_stub(), dtype=jnp.bfloat16
             )
         return batch
 

@@ -7,5 +7,8 @@ Layering (low to high):
   gossip      per-matching ppermute averaging (W = I - alpha * sum L_j),
               sequential (masked/static) and overlapped (one-step-delayed)
   decen_train stacked per-node state + the decentralized SGD train step
+  fsdp        sharded replicas: each node keeps 1/S of every bucket (and
+              of the optimizer state) along the "shard" mesh axis; gossip
+              runs directly on the shards
   serve       prefill/decode step functions + cache shardings
 """

@@ -14,6 +14,13 @@ independent of gossip.
 
 ``BucketPlan`` is static (shapes/offsets resolved at trace time);
 ``ravel``/``unravel`` are pure jnp reshuffles with no host sync.
+
+For the FSDP-style sharded-replica mode (``repro.dist.fsdp``) the plan
+accepts ``pad_to=S``: every bucket size is rounded up to a multiple of
+the shard count (zero-padded tail), so a bucket splits into S equal
+contiguous shards and one node keeps exactly one ``(size // S,)`` slice
+per bucket. ``ravel_stacked``/``unravel_stacked`` are the node-stacked
+(leading node dim) variants used by gather-on-save / scatter-on-restore.
 """
 from __future__ import annotations
 
@@ -61,7 +68,7 @@ def _leaf_size(shape: Tuple[int, ...]) -> int:
 
 
 def plan_buckets(
-    tree: PyTree, *, target_bytes: int = DEFAULT_TARGET_BYTES
+    tree: PyTree, *, target_bytes: int = DEFAULT_TARGET_BYTES, pad_to: int = 1
 ) -> BucketPlan:
     """Greedy contiguous packing of the float leaves of ``tree``.
 
@@ -71,9 +78,15 @@ def plan_buckets(
     fp32, so no bucket exceeds the target unless a single leaf does; an
     oversized leaf gets a bucket of its own rather than being split,
     keeping unravel a pure reshape.
+
+    ``pad_to`` rounds every bucket size up to a multiple (zero-padded at
+    the tail by ``ravel``), so buckets divide evenly into ``pad_to``
+    contiguous shards — the layout contract of ``repro.dist.fsdp``.
     """
     if target_bytes <= 0:
         raise ValueError(f"target_bytes must be positive, got {target_bytes}")
+    if pad_to < 1:
+        raise ValueError(f"pad_to must be >= 1, got {pad_to}")
     leaves, treedef = jax.tree.flatten(tree)
     target_elems = max(1, target_bytes // 4)
 
@@ -97,6 +110,8 @@ def plan_buckets(
         leaf_offset.append(fill)
         bucket_sizes[-1] += size
         fill += size
+    if pad_to > 1:
+        bucket_sizes = [-(-s // pad_to) * pad_to for s in bucket_sizes]
     return BucketPlan(
         treedef=treedef,
         shapes=tuple(shapes),
@@ -123,7 +138,8 @@ def _check_structure(plan: BucketPlan, leaves, treedef) -> None:
 
 def ravel(plan: BucketPlan, tree: PyTree) -> Tuple[jax.Array, ...]:
     """Pack the float leaves of ``tree`` into fp32 buckets, each a
-    contiguous 1-D ``(bucket_size,)`` array in plan order."""
+    contiguous 1-D ``(bucket_size,)`` array in plan order (zero-padded
+    at the tail for a ``pad_to`` plan)."""
     leaves, treedef = jax.tree.flatten(tree)
     _check_structure(plan, leaves, treedef)
     parts: list = [[] for _ in range(plan.num_buckets)]
@@ -131,9 +147,13 @@ def ravel(plan: BucketPlan, tree: PyTree) -> Tuple[jax.Array, ...]:
         if not floaty:
             continue
         parts[b].append(jnp.ravel(leaf).astype(jnp.float32))
-    return tuple(
-        jnp.concatenate(p) if len(p) > 1 else p[0] for p in parts
-    )
+    out = []
+    for p, size in zip(parts, plan.bucket_sizes):
+        buf = jnp.concatenate(p) if len(p) > 1 else p[0]
+        if buf.shape[0] != size:
+            buf = jnp.pad(buf, (0, size - buf.shape[0]))
+        out.append(buf)
+    return tuple(out)
 
 
 def unravel(
@@ -170,4 +190,102 @@ def unravel(
             continue
         size = _leaf_size(shape)
         out.append(buckets[b][off:off + size].reshape(shape))
+    return jax.tree.unflatten(plan.treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Node-stacked variants + shard slicing (FSDP layout helpers)
+# ---------------------------------------------------------------------------
+def shard_buckets(
+    buckets: Tuple[jax.Array, ...], num_shards: int
+) -> Tuple[jax.Array, ...]:
+    """Split 1-D buckets into ``num_shards`` equal contiguous slices:
+    ``(size,) -> (num_shards, size // num_shards)``. Requires a plan
+    built with ``pad_to=num_shards`` (or otherwise divisible sizes)."""
+    out = []
+    for bkt in buckets:
+        if bkt.shape[-1] % num_shards:
+            raise ValueError(
+                f"bucket of {bkt.shape[-1]} elements does not divide into "
+                f"{num_shards} shards — plan with pad_to={num_shards}"
+            )
+        out.append(bkt.reshape(bkt.shape[:-1] + (num_shards, -1)))
+    return tuple(out)
+
+
+def unshard_buckets(shards: Tuple[jax.Array, ...]) -> Tuple[jax.Array, ...]:
+    """Inverse of ``shard_buckets``: merge the trailing (shards, slice)
+    dims back into one contiguous bucket dim."""
+    return tuple(s.reshape(s.shape[:-2] + (-1,)) for s in shards)
+
+
+def ravel_stacked(plan: BucketPlan, tree: PyTree) -> Tuple[jax.Array, ...]:
+    """``ravel`` for node-stacked trees: every leaf carries a leading
+    node dim; buckets come back ``(nodes, bucket_size)`` fp32."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if treedef != plan.treedef:
+        raise ValueError(
+            f"tree structure {treedef} does not match the bucket plan's "
+            f"{plan.treedef}"
+        )
+    num = None
+    for leaf, shape in zip(leaves, plan.shapes):
+        if tuple(leaf.shape[1:]) != shape:
+            raise ValueError(
+                f"stacked leaf shape {tuple(leaf.shape)} does not match "
+                f"planned per-node shape {shape}"
+            )
+        if num is None:
+            num = int(leaf.shape[0])
+        elif int(leaf.shape[0]) != num:
+            raise ValueError("inconsistent leading node dim across leaves")
+    parts: list = [[] for _ in range(plan.num_buckets)]
+    for leaf, floaty, b in zip(leaves, plan.is_float, plan.leaf_bucket):
+        if not floaty:
+            continue
+        parts[b].append(
+            jnp.reshape(leaf, (leaf.shape[0], -1)).astype(jnp.float32)
+        )
+    out = []
+    for p, size in zip(parts, plan.bucket_sizes):
+        buf = jnp.concatenate(p, axis=1) if len(p) > 1 else p[0]
+        if buf.shape[1] != size:
+            buf = jnp.pad(buf, ((0, 0), (0, size - buf.shape[1])))
+        out.append(buf)
+    return tuple(out)
+
+
+def unravel_stacked(
+    plan: BucketPlan,
+    buckets: Tuple[jax.Array, ...],
+    like: Optional[PyTree] = None,
+) -> PyTree:
+    """Inverse of ``ravel_stacked``: ``(nodes, bucket_size)`` buckets back
+    to a node-stacked tree (float leaves fp32; non-float positions from
+    ``like`` when given, else ``None``)."""
+    if len(buckets) != plan.num_buckets:
+        raise ValueError(
+            f"got {len(buckets)} buckets, plan has {plan.num_buckets}"
+        )
+    for bkt, size in zip(buckets, plan.bucket_sizes):
+        if bkt.ndim != 2 or bkt.shape[1] != size:
+            raise ValueError(
+                f"stacked bucket shape {bkt.shape} does not match planned "
+                f"(nodes, {size})"
+            )
+    like_leaves = None
+    if like is not None:
+        like_leaves, like_def = jax.tree.flatten(like)
+        if like_def != plan.treedef:
+            raise ValueError("like tree structure does not match the plan")
+    out = []
+    for i, (shape, floaty, b, off) in enumerate(
+        zip(plan.shapes, plan.is_float, plan.leaf_bucket, plan.leaf_offset)
+    ):
+        if not floaty:
+            out.append(like_leaves[i] if like_leaves is not None else None)
+            continue
+        size = _leaf_size(shape)
+        n = buckets[b].shape[0]
+        out.append(buckets[b][:, off:off + size].reshape((n,) + shape))
     return jax.tree.unflatten(plan.treedef, out)

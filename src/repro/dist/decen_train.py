@@ -59,6 +59,7 @@ class DistSpec:
     multi_pod: bool
     sequence_parallel: bool
     rules: shd.ShardingRules
+    num_shards: int = 1           # FSDP shard factor ("shard" mesh axis)
 
     @property
     def node_axes(self) -> Tuple[str, ...]:
@@ -94,6 +95,7 @@ def make_spec(
         multi_pod=multi_pod,
         sequence_parallel=sequence_parallel,
         rules=rules,
+        num_shards=shd.num_shards(mesh),
     )
 
 
@@ -241,6 +243,17 @@ def _apply_delayed(
     return ops.gossip_apply(p, target, alpha)
 
 
+def _reject_shard_mesh(spec: DistSpec, what: str) -> None:
+    """Replicated-step builders on an FSDP mesh would silently keep a
+    full O(model) copy per device (replicated over the shard axis) —
+    exactly the memory blow-up the shard axis exists to remove."""
+    if spec.num_shards > 1:
+        raise ValueError(
+            f"{what}: mesh has a 'shard' axis of size {spec.num_shards}; "
+            "use the sharded-replica builders in repro.dist.fsdp"
+        )
+
+
 def make_gossip_flush(plan, spec: DistSpec, bplan: bucketing.BucketPlan):
     """Land the exchange still in flight after the last overlap step:
 
@@ -249,6 +262,7 @@ def make_gossip_flush(plan, spec: DistSpec, bplan: bucketing.BucketPlan):
     Training in overlap mode leaves one delayed correction pending;
     apply it before checkpointing / evaluating consensus so the final
     replicas include every exchange the schedule paid for."""
+    _reject_shard_mesh(spec, "make_gossip_flush")
     nodes_ax = spec.nodes_axis
     alpha = float(plan.alpha)
 
@@ -308,8 +322,11 @@ def make_train_step(
     step, so XLA's latency-hiding scheduler can run them concurrently
     with the dot-products instead of after them.
     """
+    if gossip_mode == "sequential":   # the fsdp-side spelling of "masked"
+        gossip_mode = "masked"
     if gossip_mode not in ("masked", "static", "overlap", "none"):
         raise ValueError(f"unknown gossip_mode {gossip_mode!r}")
+    _reject_shard_mesh(spec, "make_train_step")
     info = spec.node_info
     nodes_ax = spec.nodes_axis
     mesh = spec.mesh

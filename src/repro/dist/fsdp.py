@@ -1,0 +1,456 @@
+"""FSDP-style sharded replicas on the gossip bucket layout.
+
+The replicated runtime (``repro.dist.decen_train``) keeps a full fp32
+parameter copy plus full optimizer state on every node, so per-device
+memory is O(model) no matter how many devices the mesh has — the large
+registry configs OOM exactly there. This module shards each node's
+replica over a ``shard`` mesh axis of size S using the same contiguous
+fp32 buckets the overlap gossip mode introduced
+(``repro.dist.bucketing`` with ``pad_to=S``): one device keeps one
+``(bucket_size // S,)`` slice of every bucket, and the optimizer state
+lives on the slices too, so per-device training state is O(model / S).
+
+One train step (per Wang et al. 2024's bucketed-contiguous layout):
+
+    all-gather(bucket shards over "shard")  ->  unravel to the param tree
+    fwd/bwd on the node's batch slice       ->  grads
+    ravel(grads) -> reduce-scatter(mean)    ->  grad shards
+    elementwise optimizer update            ->  new param shards
+    gossip ppermutes directly on the shards ->  consensus correction
+
+Gossip composes with the sharding for free: every matching's ppermute
+runs over the node axes only, so shard s of node i exchanges with shard
+s of its partner and each matching moves 1/S of the replicated-mode
+bytes — MATCHA's communication saving and FSDP's memory saving multiply.
+The node's batch is split over the shard axis (``batch_per_node`` must
+divide by S), so the reduce-scatter both averages the sub-batch grads
+and leaves each device exactly its slice.
+
+Parameters are held as fp32 master shards (the gossip/consensus dtype);
+the all-gathered tree is cast back to the declared param dtype before
+the fwd/bwd. With fp32 params (every registry config trains fp32) a
+``--shard 1`` mesh replays the replicated step's arithmetic exactly.
+
+Execution strategies mirror the replicated runtime: ``"sequential"``
+(in-step masked exchange, one executable for the whole schedule — the
+analogue of ``gossip_mode="masked"``), ``"overlap"`` (one-step-delayed
+exchange carried in the same ``GossipState`` container, flushed by
+``make_fsdp_gossip_flush``), and ``"none"`` (local SGD only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+import repro  # ensures the jax.shard_map compat shim is installed  # noqa: F401
+from repro.dist import bucketing
+from repro.dist import sharding as shd
+from repro.dist.decen_train import DistSpec, GossipState
+from repro.dist.gossip import (
+    delayed_delta,
+    launch_matchings_masked,
+    mix_matchings_masked,
+)
+from repro.kernels import ops
+from repro.optim.optimizers import Optimizer, apply_updates
+
+PyTree = Any
+
+FSDP_GOSSIP_MODES = ("sequential", "overlap", "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class FsdpLayout:
+    """Static sharded-replica layout: the bucket plan (padded to the
+    shard factor) plus the abstract per-node param tree it was built
+    from (shapes + storage dtypes for the materialize cast)."""
+
+    plan: bucketing.BucketPlan
+    abs_local: PyTree             # ShapeDtypeStructs of one node's params
+    num_nodes: int
+    num_shards: int
+
+    @property
+    def shard_sizes(self) -> Tuple[int, ...]:
+        return tuple(s // self.num_shards for s in self.plan.bucket_sizes)
+
+    @property
+    def per_device_elements(self) -> int:
+        return sum(self.shard_sizes)
+
+
+def make_layout(
+    model,
+    spec: DistSpec,
+    *,
+    target_bytes: int = bucketing.DEFAULT_TARGET_BYTES,
+) -> FsdpLayout:
+    """Bucket layout of one node's parameters, shard-divisible."""
+    abs_local = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    for leaf in jax.tree.leaves(abs_local):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            raise ValueError(
+                "fsdp mode shards every param leaf into the fp32 buckets; "
+                f"non-float leaf of dtype {leaf.dtype} cannot be sharded"
+            )
+    plan = bucketing.plan_buckets(
+        abs_local, target_bytes=target_bytes, pad_to=spec.num_shards
+    )
+    return FsdpLayout(
+        plan=plan,
+        abs_local=abs_local,
+        num_nodes=spec.num_nodes,
+        num_shards=spec.num_shards,
+    )
+
+
+# ---------------------------------------------------------------------------
+# State init + shardings: every array carries leading (nodes, shards) dims
+# ---------------------------------------------------------------------------
+def _stack2(layout: FsdpLayout, tree: PyTree) -> PyTree:
+    n, s = layout.num_nodes, layout.num_shards
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None, None], (n, s) + a.shape), tree
+    )
+
+
+def init_fsdp_params(
+    model, layout: FsdpLayout, seed: int = 0
+) -> Tuple[jax.Array, ...]:
+    """Sharded replicas of one init: per bucket ``(nodes, S, size // S)``
+    fp32 — every node starts from the same point, like the replicated
+    ``init_stacked_params``."""
+    params = model.init(jax.random.key(seed))
+    buckets = bucketing.ravel(layout.plan, params)
+    shards = bucketing.shard_buckets(buckets, layout.num_shards)
+    n = layout.num_nodes
+    return tuple(
+        jnp.broadcast_to(s[None], (n,) + s.shape) for s in shards
+    )
+
+
+def _abs_shards(layout: FsdpLayout) -> Tuple[jax.ShapeDtypeStruct, ...]:
+    return tuple(
+        jax.ShapeDtypeStruct((sz,), jnp.float32) for sz in layout.shard_sizes
+    )
+
+
+def init_fsdp_opt_state(opt: Optimizer, layout: FsdpLayout) -> PyTree:
+    """Optimizer state over the param *shards*: param-shaped slots
+    (velocity, mu, nu) are per-shard fp32 slices, scalar slots (step)
+    broadcast — all stacked ``(nodes, S, ...)``."""
+    zeros = tuple(
+        jnp.zeros((sz,), jnp.float32) for sz in layout.shard_sizes
+    )
+    return _stack2(layout, opt.init(zeros))
+
+
+def fsdp_param_pspecs(spec: DistSpec, layout: FsdpLayout):
+    nodes = spec.nodes_axis
+    return tuple(
+        P(nodes, "shard") for _ in range(layout.plan.num_buckets)
+    )
+
+
+def fsdp_opt_pspecs(opt: Optimizer, spec: DistSpec, layout: FsdpLayout):
+    state_abs = jax.eval_shape(opt.init, _abs_shards(layout))
+    nodes = spec.nodes_axis
+    return jax.tree.map(lambda _: P(nodes, "shard"), state_abs)
+
+
+def init_fsdp_gossip_state(layout: FsdpLayout) -> GossipState:
+    """Empty in-flight buffer for the overlap mode, on the shard slices."""
+    n, s = layout.num_nodes, layout.num_shards
+    return GossipState(
+        delta=tuple(
+            jnp.zeros((n, s, sz), jnp.float32) for sz in layout.shard_sizes
+        ),
+    )
+
+
+def fsdp_gossip_state_pspecs(spec: DistSpec, layout: FsdpLayout) -> GossipState:
+    nodes = spec.nodes_axis
+    return GossipState(
+        delta=tuple(P(nodes, "shard") for _ in range(layout.plan.num_buckets))
+    )
+
+
+def consensus_distance_sharded(shards: Tuple[jax.Array, ...]):
+    """``decen_train.consensus_distance`` computed directly on the
+    ``(nodes, S, slice)`` shard arrays — the squared node-deviations
+    decompose over the contiguous slices, so the replica spread can be
+    logged without gathering full O(model) copies (the whole point of
+    the shard mode). Padding contributes zero: it starts identical on
+    every node and stays identical (zero grads, zero gossip delta)."""
+    acc = None
+    for s in shards:
+        x = s.astype(jnp.float32)
+        mu = x.mean(axis=0, keepdims=True)
+        d = jnp.sum((x - mu) ** 2, axis=(1, 2))
+        acc = d if acc is None else acc + d
+    if acc is None:
+        return jnp.float32(0.0)
+    return jnp.sqrt(jnp.mean(acc))
+
+
+# ---------------------------------------------------------------------------
+# Gather / scatter: checkpoint + eval interop with the replicated layout
+# ---------------------------------------------------------------------------
+def gather_params(layout: FsdpLayout, shards: Tuple[jax.Array, ...]) -> PyTree:
+    """Sharded replicas back to the node-stacked param tree (leaves cast
+    to their declared storage dtype) — the exact layout the replicated
+    runtime and ``checkpoint.ckpt.save_run`` use, so fsdp checkpoints are
+    interchangeable with replicated ones at any shard factor."""
+    full = bucketing.unshard_buckets(shards)          # (nodes, size) each
+    tree = bucketing.unravel_stacked(layout.plan, full)
+    return jax.tree.map(
+        lambda x, a: x.astype(a.dtype), tree, layout.abs_local
+    )
+
+
+def scatter_params(
+    layout: FsdpLayout, stacked_params: PyTree
+) -> Tuple[jax.Array, ...]:
+    """Node-stacked param tree to sharded replicas (restore path)."""
+    buckets = bucketing.ravel_stacked(layout.plan, stacked_params)
+    return bucketing.shard_buckets(buckets, layout.num_shards)
+
+
+def _is_bucket_slot(layout: FsdpLayout, sub: PyTree) -> bool:
+    probe = tuple(range(layout.plan.num_buckets))
+    return jax.tree.structure(sub) == jax.tree.structure(probe)
+
+
+def gather_opt_state(layout: FsdpLayout, sharded_state: PyTree) -> PyTree:
+    """Sharded optimizer state to the replicated stacked layout
+    (param-shaped slots back to leaf trees, scalar slots to (nodes,))."""
+    out = {}
+    for key, sub in sharded_state.items():
+        if _is_bucket_slot(layout, sub):
+            full = bucketing.unshard_buckets(tuple(sub))
+            out[key] = bucketing.unravel_stacked(layout.plan, full)
+        else:
+            out[key] = jax.tree.map(lambda a: a[:, 0], sub)
+    return out
+
+
+def scatter_opt_state(
+    layout: FsdpLayout, opt: Optimizer, stacked_state: PyTree
+) -> PyTree:
+    """Replicated stacked optimizer state to the sharded layout."""
+    params_struct = jax.tree.structure(layout.abs_local)
+    s = layout.num_shards
+    out = {}
+    for key, sub in stacked_state.items():
+        if jax.tree.structure(sub) == params_struct:
+            buckets = bucketing.ravel_stacked(layout.plan, sub)
+            out[key] = bucketing.shard_buckets(buckets, s)
+        else:
+            out[key] = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[:, None], (a.shape[0], s) + a.shape[1:]
+                ),
+                sub,
+            )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# In-body pieces (run inside shard_map, manual over node axes + "shard")
+# ---------------------------------------------------------------------------
+def _materialize(layout: FsdpLayout, shards: Tuple[jax.Array, ...]) -> PyTree:
+    """all-gather the bucket shards over the shard axis and unravel to a
+    full per-node param tree in storage dtype (the fwd/bwd view)."""
+    full = tuple(
+        jax.lax.all_gather(s, "shard", tiled=True) for s in shards
+    )
+    tree = bucketing.unravel(layout.plan, full)
+    return jax.tree.map(
+        lambda x, a: x.astype(a.dtype), tree, layout.abs_local
+    )
+
+
+def _reduce_scatter_grads(
+    layout: FsdpLayout, grads: PyTree
+) -> Tuple[jax.Array, ...]:
+    """ravel the grad tree and reduce-scatter over the shard axis: each
+    device gets the mean of the S sub-batch grads, sliced to its shard
+    (mean over sub-batches == the full-batch grad of the token-mean
+    loss, since the batch splits evenly)."""
+    s = layout.num_shards
+    buckets = bucketing.ravel(layout.plan, grads)
+    out = []
+    for g in buckets:
+        r = jax.lax.psum_scatter(g, "shard", scatter_dimension=0, tiled=True)
+        out.append(r / s if s > 1 else r)
+    return tuple(out)
+
+
+def _clip_sharded(
+    g_shards: Tuple[jax.Array, ...], max_norm: float
+) -> Tuple[jax.Array, ...]:
+    """Global-norm clip of the *full* per-node gradient from its shards:
+    local sum-of-squares psum'd over the shard axis, one scale."""
+    sq = sum(jnp.sum(jnp.square(g)) for g in g_shards)
+    norm = jnp.sqrt(jax.lax.psum(sq, "shard"))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return tuple(g * scale for g in g_shards)
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+def make_fsdp_train_step(
+    model,
+    opt: Optimizer,
+    plan,                                 # repro.core.MatchaPlan
+    spec: DistSpec,
+    layout: FsdpLayout,
+    *,
+    gossip_mode: str = "sequential",
+    grad_clip: float = 0.0,
+):
+    """Build the jitted sharded-replica decentralized step.
+
+    For ``gossip_mode`` in ("sequential", "none"):
+
+        shards, opt_state, losses, metrics = step(shards, opt_state,
+                                                  batch, bits)
+
+    For ``gossip_mode="overlap"`` the step threads the in-flight
+    exchange exactly like the replicated overlap mode:
+
+        shards, opt_state, gstate, losses, metrics = step(
+            shards, opt_state, gstate, batch, bits)
+
+    ``shards`` is the tuple from ``init_fsdp_params`` (per bucket
+    ``(nodes, S, size // S)`` fp32); ``opt_state`` from
+    ``init_fsdp_opt_state``; ``batch`` leaves are
+    ``(nodes, batch_per_node, ...)`` with ``batch_per_node % S == 0``
+    (split over the shard axis in-step); ``bits`` the (M,) activation
+    row. ``losses``/``metrics`` come back ``(nodes, S)`` with identical
+    columns (pmean'd over the shard axis).
+    """
+    if gossip_mode == "masked":            # replicated-runtime spelling
+        gossip_mode = "sequential"
+    if gossip_mode not in FSDP_GOSSIP_MODES:
+        raise ValueError(
+            f"unknown fsdp gossip_mode {gossip_mode!r}; "
+            f"choose from {FSDP_GOSSIP_MODES}"
+        )
+    if spec.num_shards != layout.num_shards:
+        raise ValueError(
+            f"spec mesh has shard factor {spec.num_shards} but the layout "
+            f"was built for {layout.num_shards}"
+        )
+    info = spec.node_info
+    nodes_ax = spec.nodes_axis
+    mesh = spec.mesh
+    manual = set(spec.node_axes) | {"shard"}
+    perms = np.asarray(plan.permutations)
+    alpha = float(plan.alpha)
+
+    def sgd_half(ps, s, batch):
+        # batch local view is (1 node, B/S, ...): strip the node dim
+        b = jax.tree.map(lambda a: a[0], batch)
+        p = _materialize(layout, ps)
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True
+        )(p, b)
+        g = _reduce_scatter_grads(layout, grads)
+        if grad_clip:
+            g = _clip_sharded(g, grad_clip)
+        updates, s = opt.update(g, s, ps)
+        ps = apply_updates(ps, updates)
+        # per-node loss: mean of the S sub-batch token-means
+        loss = jax.lax.pmean(loss, "shard")
+        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, "shard"), metrics)
+        return ps, s, loss, metrics
+
+    ex2 = lambda t: jax.tree.map(lambda a: a[None, None], t)
+
+    def body(shards, opt_state, batch, bits):
+        ps = tuple(a[0, 0] for a in shards)
+        s = jax.tree.map(lambda a: a[0, 0], opt_state)
+        ps, s, loss, metrics = sgd_half(ps, s, batch)
+        if gossip_mode == "sequential":
+            # masked gossip directly on the bucket shards: the ppermutes
+            # run over the node axes only, so shard s exchanges with
+            # shard s of the partner — 1/S of the replicated bytes per
+            # matching, same arithmetic as the replicated masked mode
+            ps = mix_matchings_masked(ps, alpha, perms, bits, info)
+        return ex2(ps), ex2(s), loss[None, None], ex2(metrics)
+
+    def body_overlap(shards, opt_state, gstate, batch, bits):
+        ps = tuple(a[0, 0] for a in shards)
+        s = jax.tree.map(lambda a: a[0, 0], opt_state)
+        # 1. land the delayed correction from the in-flight exchange
+        delta = tuple(a[0, 0] for a in gstate.delta)
+        target = tuple(x + d for x, d in zip(ps, delta))
+        ps = ops.gossip_apply(ps, target, alpha)
+        # 2. launch this iteration's exchange on the corrected shards;
+        #    nothing below consumes it, so the ppermutes overlap the
+        #    all-gather + fwd/bwd
+        recv = launch_matchings_masked(ps, bits, perms, info)
+        new_delta = delayed_delta(ps, recv, bits)
+        # 3. local SGD on the corrected shards
+        ps, s, loss, metrics = sgd_half(ps, s, batch)
+        new_state = GossipState(delta=tuple(a[None, None] for a in new_delta))
+        return ex2(ps), ex2(s), new_state, loss[None, None], ex2(metrics)
+
+    pspec = tuple(P(nodes_ax, "shard") for _ in range(layout.plan.num_buckets))
+    batch_spec = P(nodes_ax, "shard")
+    opt_spec = fsdp_opt_pspecs(opt, spec, layout)
+    ls_spec = P(nodes_ax, "shard")
+
+    if gossip_mode == "overlap":
+        gspecs = fsdp_gossip_state_pspecs(spec, layout)
+        stepped = jax.shard_map(
+            body_overlap,
+            mesh=mesh,
+            in_specs=(pspec, opt_spec, gspecs, batch_spec, P()),
+            out_specs=(pspec, opt_spec, gspecs, ls_spec, ls_spec),
+            axis_names=manual,
+        )
+        return jax.jit(stepped)
+
+    stepped = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(pspec, opt_spec, batch_spec, P()),
+        out_specs=(pspec, opt_spec, ls_spec, ls_spec),
+        axis_names=manual,
+    )
+    return jax.jit(stepped)
+
+
+def make_fsdp_gossip_flush(plan, spec: DistSpec, layout: FsdpLayout):
+    """Land the exchange still in flight after the last overlap step,
+    directly on the shards: ``shards = flush(shards, gstate)`` — the
+    sharded analogue of ``decen_train.make_gossip_flush`` (same
+    ``GossipState``, same fused gossip-axpy)."""
+    nodes_ax = spec.nodes_axis
+    manual = set(spec.node_axes) | {"shard"}
+    alpha = float(plan.alpha)
+
+    def body(shards, gstate):
+        ps = tuple(a[0, 0] for a in shards)
+        delta = tuple(a[0, 0] for a in gstate.delta)
+        target = tuple(x + d for x, d in zip(ps, delta))
+        out = ops.gossip_apply(ps, target, alpha)
+        return tuple(a[None, None] for a in out)
+
+    pspec = tuple(P(nodes_ax, "shard") for _ in range(layout.plan.num_buckets))
+    stepped = jax.shard_map(
+        body,
+        mesh=spec.mesh,
+        in_specs=(pspec, fsdp_gossip_state_pspecs(spec, layout)),
+        out_specs=pspec,
+        axis_names=manual,
+    )
+    return jax.jit(stepped)

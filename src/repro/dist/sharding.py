@@ -171,6 +171,17 @@ def num_nodes(mesh: Mesh, *, multi_pod: bool) -> int:
     return n
 
 
+def num_shards(mesh: Mesh) -> int:
+    """FSDP shard count of ``mesh``: the size of its ``shard`` axis.
+
+    Meshes without the axis run with full replicas (shard factor 1).
+    Like ``num_nodes`` this is the single authority — ``repro.dist.fsdp``
+    and the launchers must agree on it."""
+    if "shard" not in mesh.axis_names:
+        return 1
+    return int(mesh.shape["shard"])
+
+
 # ---------------------------------------------------------------------------
 # Config-aware rule construction
 # ---------------------------------------------------------------------------

@@ -11,9 +11,18 @@ m=4..8 nodes on the real decentralized runtime (shard_map gossip) and
 reproduces the paper's qualitative curves; the same driver drives the
 full configs on a TPU pod.
 
+``--shard N`` (N > 1) runs the FSDP-style sharded-replica mode
+(``repro.dist.fsdp``): the mesh gains a ``shard`` axis, each node keeps
+1/N of every param bucket + optimizer slot, and gossip exchanges the
+shards directly (1/N of the bytes per matching). Checkpoints are
+gathered on save, so the same directory restores into any shard factor
+(and into the replicated runtime).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch internlm2_1_8b \
       --preset tiny --graph paper8 --nodes 8 --budget 0.5 --steps 100
+  PYTHONPATH=src python -m repro.launch.train --preset tiny --nodes 4 \
+      --shard 2 --gossip-mode overlap --steps 50
 """
 from __future__ import annotations
 
@@ -45,7 +54,10 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--gossip-mode", "--gossip-impl", dest="gossip_mode",
                     default="masked",
-                    choices=("masked", "static", "overlap"))
+                    choices=("masked", "sequential", "static", "overlap"))
+    ap.add_argument("--shard", type=int, default=1,
+                    help="FSDP shard factor: each node keeps 1/N of the "
+                         "params + optimizer state (N=1: full replicas)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--resume", default="")
@@ -53,8 +65,23 @@ def main():
     ap.add_argument("--non-iid", action="store_true")
     args = ap.parse_args()
 
+    if args.shard < 1:
+        raise SystemExit(f"--shard must be >= 1, got {args.shard}")
+    # "sequential" and "masked" are the same execution (every matching
+    # exchanged in-step, deltas scaled by the schedule bits); both step
+    # builders accept either spelling
+    use_fsdp = args.shard > 1
+    if use_fsdp and args.gossip_mode == "static":
+        raise SystemExit("--shard > 1 supports --gossip-mode "
+                         "sequential/masked or overlap, not static")
+    if use_fsdp and args.batch_per_node % args.shard:
+        raise SystemExit(
+            f"--batch-per-node {args.batch_per_node} must divide by "
+            f"--shard {args.shard} (the node's batch splits over the "
+            "shard axis)")
+
     # device count must be set before jax import
-    ndev = args.nodes * args.model_par
+    ndev = args.nodes * args.shard * args.model_par
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={ndev}"
     )
@@ -69,6 +96,7 @@ def main():
     )
     from repro.data.pipeline import DecentralizedBatches
     from repro.dist import decen_train as dt
+    from repro.dist import fsdp
     from repro.dist import sharding as shd
     from repro.models.transformer import Model
     from repro.optim.optimizers import sgd
@@ -97,29 +125,63 @@ def main():
         plan = plan_matcha(graph, args.budget, seed=args.seed)
         schedule = plan.schedule(args.steps, seed=args.seed)
 
-    mesh = jax.make_mesh((args.nodes, args.model_par), ("data", "model"))
+    if use_fsdp:
+        mesh = jax.make_mesh(
+            (args.nodes, args.shard, args.model_par),
+            ("data", "shard", "model"),
+        )
+    else:
+        mesh = jax.make_mesh((args.nodes, args.model_par), ("data", "model"))
     model = Model(cfg)
     opt = sgd(args.lr, momentum=args.momentum)
     spec = dt.make_spec(mesh, cfg, multi_pod=False)
 
-    params = dt.init_stacked_params(model, spec, seed=args.seed)
-    opt_state = dt.init_stacked_opt_state(opt, model, spec)
+    layout = None
+    if use_fsdp:
+        layout = fsdp.make_layout(model, spec)
+        params = fsdp.init_fsdp_params(model, layout, seed=args.seed)
+        opt_state = fsdp.init_fsdp_opt_state(opt, layout)
+        print(f"fsdp: shard={args.shard}, "
+              f"{layout.per_device_elements * 4 / 1e6:.2f} MB params/device "
+              f"(of {layout.plan.total_elements * 4 / 1e6:.2f} MB/replica)")
+    else:
+        params = dt.init_stacked_params(model, spec, seed=args.seed)
+        opt_state = dt.init_stacked_opt_state(opt, model, spec)
     start_step = 0
     if args.resume:
-        params, opt_state, start_step = ckpt_lib.restore_run(args.resume)
+        # checkpoints are stored gathered (stacked), shard-agnostic
+        r_params, r_opt, start_step = ckpt_lib.restore_run(args.resume)
+        if use_fsdp:
+            params = fsdp.scatter_params(layout, r_params)
+            opt_state = fsdp.scatter_opt_state(layout, opt, r_opt)
+        else:
+            params, opt_state = r_params, r_opt
         print(f"resumed from {args.resume} at step {start_step}")
 
-    pspecs = dt.stacked_param_shardings(model, spec)
+    if use_fsdp:
+        pspecs = fsdp.fsdp_param_pspecs(spec, layout)
+        ospecs = fsdp.fsdp_opt_pspecs(opt, spec, layout)
+    else:
+        pspecs = dt.stacked_param_shardings(model, spec)
+        ospecs = None
     with jax.set_mesh(mesh):
         params = jax.device_put(params, shd.named_shardings(pspecs, mesh))
+        if ospecs is not None:
+            opt_state = jax.device_put(
+                opt_state, shd.named_shardings(ospecs, mesh)
+            )
         gossip_mode = (
             "none" if args.mode == "local" else args.gossip_mode
         )
         gstate = flush = None
         if gossip_mode == "overlap":
-            bplan = dt.param_bucket_plan(model)
-            gstate = dt.init_gossip_state(plan, spec, bplan)
-            flush = dt.make_gossip_flush(plan, spec, bplan)
+            if use_fsdp:
+                gstate = fsdp.init_fsdp_gossip_state(layout)
+                flush = fsdp.make_fsdp_gossip_flush(plan, spec, layout)
+            else:
+                bplan = dt.param_bucket_plan(model)
+                gstate = dt.init_gossip_state(plan, spec, bplan)
+                flush = dt.make_gossip_flush(plan, spec, bplan)
         step_cache = {}
 
         def get_step(active):
@@ -130,12 +192,31 @@ def main():
             else:
                 key = tuple(active)
             if key not in step_cache:
-                step_cache[key] = dt.make_train_step(
-                    model, opt, plan, spec,
-                    gossip_mode=gossip_mode, active=tuple(active),
-                    bucket_plan=bplan if gossip_mode == "overlap" else None,
-                )
+                if use_fsdp:
+                    step_cache[key] = fsdp.make_fsdp_train_step(
+                        model, opt, plan, spec, layout,
+                        gossip_mode=gossip_mode,
+                    )
+                else:
+                    step_cache[key] = dt.make_train_step(
+                        model, opt, plan, spec,
+                        gossip_mode=gossip_mode, active=tuple(active),
+                        bucket_plan=bplan if gossip_mode == "overlap" else None,
+                    )
             return step_cache[key]
+
+        def eval_params(p):
+            """Full stacked replicas (checkpointing only — gathering is
+            O(model) per node, so the logging path must not use it)."""
+            return fsdp.gather_params(layout, p) if use_fsdp else p
+
+        def eval_opt_state(s):
+            return fsdp.gather_opt_state(layout, s) if use_fsdp else s
+
+        def consensus(p):
+            if use_fsdp:
+                return fsdp.consensus_distance_sharded(p)
+            return dt.consensus_distance(p)
 
         data = DecentralizedBatches(
             cfg, args.nodes, args.batch_per_node, args.seq,
@@ -168,7 +249,7 @@ def main():
                 sim_time += schedule.comm_units(k) + 1.0   # +1 compute unit
             if k % 10 == 0 or k == args.steps - 1:
                 loss_mean = float(jnp.mean(losses))
-                cons = float(dt.consensus_distance(params))
+                cons = float(consensus(params))
                 rows.append(
                     dict(step=k, loss=loss_mean, consensus=cons,
                          sim_time=sim_time, comm_units=schedule.comm_units(k),
@@ -186,17 +267,23 @@ def main():
                     flush(params, gstate) if gossip_mode == "overlap"
                     else params
                 )
-                ckpt_lib.save_run(args.ckpt_dir, save_params, opt_state,
-                                  step=k + 1)
+                ckpt_lib.save_run(
+                    args.ckpt_dir, eval_params(save_params),
+                    eval_opt_state(opt_state), step=k + 1,
+                    extra={"shard": args.shard},
+                )
 
         if gossip_mode == "overlap":
             # land the exchange still in flight from the last step
             params = flush(params, gstate)
-            cons = float(dt.consensus_distance(params))
+            cons = float(consensus(params))
             print(f"flushed in-flight gossip: consensus {cons:.3e}")
 
         if args.ckpt_dir:
-            ckpt_lib.save_run(args.ckpt_dir, params, opt_state, step=args.steps)
+            ckpt_lib.save_run(
+                args.ckpt_dir, eval_params(params), eval_opt_state(opt_state),
+                step=args.steps, extra={"shard": args.shard},
+            )
         if args.csv:
             os.makedirs(os.path.dirname(args.csv) or ".", exist_ok=True)
             import csv as csvmod

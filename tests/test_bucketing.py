@@ -80,6 +80,66 @@ def test_ravel_rejects_mismatched_tree():
         bucketing.unravel(plan, ())
 
 
+def test_pad_to_makes_buckets_shard_divisible():
+    tree = {"a": jnp.zeros((7,)), "b": jnp.zeros((13,))}
+    plan = bucketing.plan_buckets(tree, pad_to=8)
+    assert all(s % 8 == 0 for s in plan.bucket_sizes)
+    assert plan.bucket_sizes == (24,)        # 20 data elements + 4 pad
+    # data layout unchanged: leaves live at their unpadded offsets
+    buckets = bucketing.ravel(plan, tree)
+    assert tuple(b.shape[0] for b in buckets) == plan.bucket_sizes
+    back = bucketing.unravel(plan, buckets, like=tree)
+    for got, want in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # padding is zeros (gossip/optimizer on the pad stays inert)
+    tail = buckets[-1][20:]
+    np.testing.assert_array_equal(np.asarray(tail), np.zeros(tail.shape))
+    with pytest.raises(ValueError, match="pad_to"):
+        bucketing.plan_buckets(tree, pad_to=0)
+
+
+def test_shard_unshard_round_trip_and_divisibility():
+    tree = {"w": jnp.arange(24.0)}
+    plan = bucketing.plan_buckets(tree, pad_to=4)
+    buckets = bucketing.ravel(plan, tree)
+    shards = bucketing.shard_buckets(buckets, 4)
+    assert shards[0].shape == (4, 6)
+    # contiguous slices, row-major
+    np.testing.assert_array_equal(
+        np.asarray(shards[0][1]), np.arange(6.0, 12.0))
+    back = bucketing.unshard_buckets(shards)
+    np.testing.assert_array_equal(np.asarray(back[0]), np.asarray(buckets[0]))
+    with pytest.raises(ValueError, match="divide"):
+        bucketing.shard_buckets(buckets, 5)
+
+
+def test_ravel_unravel_stacked_round_trip():
+    tree = _tree()
+    plan = bucketing.plan_buckets(tree, pad_to=2)
+    n = 3
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape)
+        + jnp.arange(n, dtype=a.dtype).reshape((n,) + (1,) * a.ndim),
+        tree,
+    )
+    buckets = bucketing.ravel_stacked(plan, stacked)
+    assert all(b.shape == (n, s) for b, s in zip(buckets, plan.bucket_sizes))
+    # row i of the stacked buckets == the unstacked ravel of node i
+    for i in range(n):
+        one = jax.tree.map(lambda a: a[i], stacked)
+        for a, b in zip(bucketing.ravel(plan, one), buckets):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b[i]))
+    back = bucketing.unravel_stacked(plan, buckets, like=stacked)
+    for got, want in zip(jax.tree.leaves(back), jax.tree.leaves(stacked)):
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=1e-6, rtol=1e-6,
+        )
+    # without like: non-float positions come back None
+    back2 = bucketing.unravel_stacked(plan, buckets)
+    assert back2["nested"]["step"] is None
+
+
 # ---------------------------------------------------------------------------
 # mix_matchings validation (raises happen before any collective, so no
 # multi-device mesh is needed)

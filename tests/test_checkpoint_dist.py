@@ -28,6 +28,49 @@ def _assert_tree_equal(a, b):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
+def test_per_node_restore_order_at_128_nodes(tmp_path):
+    """Lexicographic file ordering breaks at >= 100 nodes (node_100
+    sorts before node_99): the restore must order numerically, so each
+    node gets back exactly its own replica."""
+    n = 128
+    params = {
+        "w": jnp.arange(n, dtype=jnp.float32)[:, None] * jnp.ones((1, 3)),
+        "b": 1000.0 + jnp.arange(n, dtype=jnp.float32),
+    }
+    opt_state = {"step": jnp.full((n,), 7, jnp.int32)}
+    directory = str(tmp_path / "run")
+    ckpt.save_run(directory, params, opt_state, step=5, per_node_files=True)
+    params2, opt2, step = ckpt.restore_run(directory)
+    assert step == 5
+    _assert_tree_equal(params, params2)
+    _assert_tree_equal(opt_state, opt2)
+
+
+def test_per_node_restore_validates_file_count(tmp_path):
+    """A missing / renamed node file must raise, not silently restore a
+    shorter (or re-indexed) node stack."""
+    import os
+
+    n = 12
+    params = {"w": jnp.arange(n, dtype=jnp.float32)}
+    opt_state = {"step": jnp.zeros((n,), jnp.int32)}
+    directory = str(tmp_path / "run")
+    ckpt.save_run(directory, params, opt_state, step=1, per_node_files=True)
+
+    removed = os.path.join(directory, "node_05.npz")
+    os.rename(removed, removed + ".bak")
+    with pytest.raises(ValueError, match="num_nodes"):
+        ckpt.restore_run(directory)
+    os.rename(removed + ".bak", removed)
+    ckpt.restore_run(directory)          # intact set restores fine
+
+    # a gap with the right *count* (hole + stray extra index) also raises
+    os.rename(os.path.join(directory, "node_03.npz"),
+              os.path.join(directory, "node_99.npz"))
+    with pytest.raises(ValueError, match="contiguous"):
+        ckpt.restore_run(directory)
+
+
 @pytest.mark.parametrize("per_node_files", [False, True])
 def test_stacked_state_roundtrip(tmp_path, per_node_files):
     cfg = get_smoke_config("internlm2_1_8b")

@@ -1,0 +1,112 @@
+"""Data pipeline: non-IID partitions must actually be heterogeneous,
+and the frontend embedding stubs must vary per node and per batch.
+
+Guards the two pipeline bugs fixed in PR 3: the ``iid`` flag used to be
+accepted but ignored (every node drew from the same distribution), and
+the vision/audio stubs re-seeded ``default_rng(0)`` inside every
+``__next__`` (identical embeddings for every batch, node, and step).
+"""
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import (
+    DecentralizedBatches,
+    SyntheticCorpus,
+    partition_seeds,
+)
+
+
+def _cfg(frontend=None):
+    return ModelConfig(
+        name="pipe-test", family="dense", num_layers=1, d_model=32,
+        num_heads=2, num_kv_heads=1, d_ff=64, vocab_size=128,
+        ffn_activation="silu", gated_ffn=True, pos_embed="rope",
+        tie_embeddings=True, source="test",
+        frontend=frontend, encoder_seq=8 if frontend else 0,
+        frontend_dim=16 if frontend else 0,
+    )
+
+
+def _node_histograms(batches: DecentralizedBatches, vocab: int, rounds: int):
+    """Per-node token distribution over a few batches."""
+    counts = np.zeros((batches.num_nodes, vocab))
+    it = iter(batches)
+    for _ in range(rounds):
+        toks = np.asarray(next(it)["tokens"])
+        for n in range(batches.num_nodes):
+            counts[n] += np.bincount(toks[n].ravel(), minlength=vocab)
+    return counts / counts.sum(axis=1, keepdims=True)
+
+
+def _mean_pairwise_tv(hist: np.ndarray) -> float:
+    n = hist.shape[0]
+    tv = [
+        0.5 * np.abs(hist[i] - hist[j]).sum()
+        for i in range(n) for j in range(i + 1, n)
+    ]
+    return float(np.mean(tv))
+
+
+def test_partition_seeds_shapes_and_modes():
+    seeds, priors = partition_seeds(4, iid=True, seed=0)
+    assert seeds.shape == (4,) and priors is None
+    seeds, priors = partition_seeds(4, iid=False, seed=0, num_states=6)
+    assert priors.shape == (4, 6)
+    np.testing.assert_allclose(priors.sum(axis=1), 1.0, atol=1e-12)
+    # Dirichlet(0.3) draws are skewed, not uniform, and differ per node
+    assert priors.max() > 0.5
+    assert not np.allclose(priors[0], priors[1])
+
+
+def test_non_iid_nodes_have_heterogeneous_token_distributions():
+    cfg = _cfg()
+    iid = _node_histograms(
+        DecentralizedBatches(cfg, 4, 4, 64, iid=True, seed=0),
+        cfg.vocab_size, rounds=3,
+    )
+    skew = _node_histograms(
+        DecentralizedBatches(cfg, 4, 4, 64, iid=False, seed=0),
+        cfg.vocab_size, rounds=3,
+    )
+    tv_iid, tv_skew = _mean_pairwise_tv(iid), _mean_pairwise_tv(skew)
+    # IID nodes differ only by sampling noise; Dirichlet-tilted chains
+    # must diverge far beyond it
+    assert tv_skew > 1.5 * tv_iid, (tv_iid, tv_skew)
+    assert tv_skew > 0.15, tv_skew
+
+
+def test_corpus_prior_tilts_the_chain():
+    corpus = SyntheticCorpus(64, num_states=4, seed=0)
+    rng = np.random.default_rng(1)
+    one_hot = np.array([1.0, 0.0, 0.0, 0.0])
+    a = corpus.sample(np.random.default_rng(1), 512, state_prior=one_hot)
+    b = corpus.sample(np.random.default_rng(1), 512,
+                      state_prior=one_hot[::-1].copy())
+    ha = np.bincount(a, minlength=64) / 512
+    hb = np.bincount(b, minlength=64) / 512
+    assert 0.5 * np.abs(ha - hb).sum() > 0.2
+    # no prior: the original shared chain, reproducible per seed
+    c1 = corpus.sample(np.random.default_rng(3), 64)
+    c2 = corpus.sample(np.random.default_rng(3), 64)
+    np.testing.assert_array_equal(c1, c2)
+
+
+@pytest.mark.parametrize("frontend,key", [
+    ("vision", "prefix_embeddings"), ("audio", "encoder_frames"),
+])
+def test_frontend_stub_varies_per_node_and_per_batch(frontend, key):
+    cfg = _cfg(frontend)
+    data = DecentralizedBatches(cfg, 3, 2, 16, seed=0)
+    it = iter(data)
+    b1, b2 = next(it), next(it)
+    e1, e2 = np.asarray(b1[key], np.float32), np.asarray(b2[key], np.float32)
+    assert e1.shape == (3, 2, cfg.encoder_seq, cfg.frontend_dim)
+    # fresh draws per batch and distinct streams per node
+    assert not np.array_equal(e1, e2)
+    assert not np.array_equal(e1[0], e1[1])
+    # still deterministic given the seed
+    data_again = DecentralizedBatches(cfg, 3, 2, 16, seed=0)
+    np.testing.assert_array_equal(
+        np.asarray(next(iter(data_again))[key], np.float32), e1
+    )
