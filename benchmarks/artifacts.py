@@ -1,0 +1,21 @@
+"""Single authority for benchmark artifact locations.
+
+The bench runners, the ``--smoke``/``--compare`` gates in
+``benchmarks/run.py`` and the CI workflow all read these constants —
+the artifact path must never be spelled twice (a renamed results dir
+previously had to be chased through the runner, the gate and the CI
+yaml separately).
+"""
+from __future__ import annotations
+
+import os
+
+RESULTS_DIR = os.path.join("benchmarks", "results")
+
+COMM_TIME_ARTIFACT = os.path.join(RESULTS_DIR, "BENCH_comm_time.json")
+
+
+def comm_time_artifact(out_dir: str = RESULTS_DIR) -> str:
+    """The comm-time artifact path under ``out_dir`` (callers that
+    redirect the results dir still get the canonical file name)."""
+    return os.path.join(out_dir, os.path.basename(COMM_TIME_ARTIFACT))

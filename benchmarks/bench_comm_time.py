@@ -19,7 +19,12 @@ FSDP composition: the sharded-replica mode (``repro.dist.fsdp``) keeps
 per-device param bytes AND per-matching gossip bytes both shrink by the
 shard factor — the ``fsdp`` section of the artifact tabulates both from
 the real bucket layout of the smoke model, and the smoke job asserts
-the shrink.
+the shrink. Each row also records *peak transient* bytes per device —
+the largest full-size view the fwd/bwd materializes: the whole padded
+replica for the monolithic gather vs the largest layer group for
+``--stream-layers`` (``plan_group_buckets`` over
+``Model.param_group_specs``) — and the smoke job asserts the streamed
+peak is strictly below the monolithic one at every shard factor.
 """
 from __future__ import annotations
 
@@ -30,6 +35,7 @@ import time
 
 import numpy as np
 
+from benchmarks.artifacts import RESULTS_DIR, comm_time_artifact
 from repro.core import paper_figure1_graph, plan_matcha, plan_vanilla
 
 COMPUTE_UNITS = 1.0      # the paper's linear delay model: 1 unit of compute
@@ -52,23 +58,27 @@ def step_time_model(plan, *, steps: int = 2000, seed: int = 0) -> dict:
 def fsdp_bytes_table(
     arch: str = "internlm2_1_8b", shard_factors=(1, 2, 4)
 ) -> list:
-    """Per-device param bytes and per-matching gossip bytes at each
-    shard factor, from the actual fsdp bucket layout (``pad_to=S``) of
-    the smoke model — abstract shapes only, nothing is allocated."""
+    """Per-device param bytes, per-matching gossip bytes and peak
+    transient (fwd/bwd view) bytes at each shard factor, from the
+    actual fsdp bucket layouts (``pad_to=S``) of the smoke model —
+    abstract shapes only, nothing is allocated."""
     import jax  # local: the analytic benches must not force a jax init
 
     from repro.configs.registry import get_smoke_config
     from repro.dist import bucketing
+    from repro.dist.fsdp import param_group_subtrees
     from repro.models.transformer import Model
 
     model = Model(get_smoke_config(arch))
     abs_local = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    named_groups = param_group_subtrees(model)
     raw_bytes = 4 * int(
-        sum(np.prod(l.shape) for l in jax.tree.leaves(abs_local))
+        sum(np.prod(leaf.shape) for leaf in jax.tree.leaves(abs_local))
     )
     rows = []
     for s in shard_factors:
         bplan = bucketing.plan_buckets(abs_local, pad_to=s)
+        gplan = bucketing.plan_group_buckets(list(named_groups), pad_to=s)
         per_device = bplan.total_elements // s * 4
         # one matching's ppermute sends each node's local slice of every
         # bucket exactly once (equal to the per-device resident bytes in
@@ -82,6 +92,10 @@ def fsdp_bytes_table(
             padded_param_bytes=bplan.total_elements * 4,
             per_device_param_bytes=int(per_device),
             per_matching_comm_bytes=int(per_matching),
+            # the largest full-size view the fwd/bwd ever materializes
+            peak_transient_bytes_monolithic=bplan.total_elements * 4,
+            peak_transient_bytes_streamed=gplan.max_group_elements * 4,
+            num_layer_groups=gplan.num_buckets,
         ))
     return rows
 
@@ -99,7 +113,7 @@ def per_node_comm_time(plan) -> np.ndarray:
     return out
 
 
-def run(out_dir: str = "benchmarks/results"):
+def run(out_dir: str = RESULTS_DIR):
     t0 = time.time()
     g = paper_figure1_graph()
     van = plan_vanilla(g)
@@ -174,10 +188,21 @@ def run(out_dir: str = "benchmarks/results"):
                 f"replica/{s} + 1% pad",
                 by_shard[s][field] * s <= by_shard[1][field] * 1.01,
             ))
+    # streaming: the largest layer-group view must be strictly smaller
+    # than the monolithic gathered replica at every shard factor
+    for s, r in sorted(by_shard.items()):
+        checks.append((
+            f"stream shard={s}: peak transient "
+            f"{r['peak_transient_bytes_streamed']} B "
+            f"({r['num_layer_groups']} groups) < monolithic "
+            f"{r['peak_transient_bytes_monolithic']} B",
+            r["peak_transient_bytes_streamed"]
+            < r["peak_transient_bytes_monolithic"],
+        ))
     us = (time.time() - t0) * 1e6 / max(len(rows), 1)
 
     # machine-readable artifact for the CI benchmarks smoke job
-    with open(os.path.join(out_dir, "BENCH_comm_time.json"), "w") as f:
+    with open(comm_time_artifact(out_dir), "w") as f:
         json.dump(
             dict(
                 per_node=rows,

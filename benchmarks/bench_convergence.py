@@ -105,8 +105,8 @@ def _worker(out_dir: str, steps: int):
                 if k % 5 == 0 or k == steps - 1:
                     hist.append((k, float(jnp.mean(losses)), sim_time))
         curves[label] = hist
-        for k, l, st in hist:
-            rows.append(dict(run=label, step=k, loss=round(l, 5),
+        for k, loss_k, st in hist:
+            rows.append(dict(run=label, step=k, loss=round(loss_k, 5),
                              sim_time=round(st, 1)))
 
     os.makedirs(out_dir, exist_ok=True)
@@ -119,8 +119,8 @@ def _worker(out_dir: str, steps: int):
         return curves[label][-1][1]
 
     def time_to_loss(label, target):
-        for k, l, st in curves[label]:
-            if l <= target:
+        for k, loss_k, st in curves[label]:
+            if loss_k <= target:
                 return st
         return float("inf")
 

@@ -16,7 +16,7 @@ import glob
 import json
 import os
 import time
-from typing import Dict, Optional
+from typing import Dict
 
 DRYRUN_DIR = "benchmarks/results/dryrun"
 

@@ -11,8 +11,6 @@ import csv
 import os
 import time
 
-import numpy as np
-
 from repro.core import named_graph, plan_matcha, plan_periodic, plan_vanilla
 
 GRAPHS = {

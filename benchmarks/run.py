@@ -13,9 +13,20 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--skip convergence]
 
 ``--smoke`` runs only the fast analytic benches (spectral, comm_time —
 no model training), suitable for CI; comm_time leaves its
-``BENCH_comm_time.json`` artifact in benchmarks/results/ and ``--smoke``
+``BENCH_comm_time.json`` artifact in ``benchmarks/results/`` (the one
+place that path is defined: ``benchmarks.artifacts``) and ``--smoke``
 additionally re-reads the artifact to assert the fsdp sharded config
-shrank per-device param bytes by the shard factor.
+shrank per-device param bytes by the shard factor and that the
+streamed peak-transient bytes sit below the monolithic gather.
+
+``--compare BASELINE`` is the regression gate: the baseline JSON (the
+committed ``benchmarks/results/BENCH_comm_time.json``) is read *before*
+the benches overwrite the artifact, and after the run every per-shard
+byte metric (per-device resident, per-matching gossip, streamed peak
+transient) must sit within +5% of the baseline or the run fails.
+
+On exit the aggregator always prints the artifact path and a one-line
+verdict summary, so a red CI job is diagnosable from the log alone.
 """
 from __future__ import annotations
 
@@ -25,22 +36,34 @@ import os
 import sys
 import traceback
 
+from benchmarks.artifacts import COMM_TIME_ARTIFACT
+
 SMOKE = ("spectral", "comm_time")
 
+# (arch, shard)-keyed byte metrics gated against the committed baseline:
+# any of these growing >5% is a memory/communication regression
+REGRESSION_FIELDS = (
+    "per_device_param_bytes",
+    "per_matching_comm_bytes",
+    "peak_transient_bytes_streamed",
+)
+REGRESSION_TOLERANCE = 1.05
 
-def _assert_fsdp_shrink(path: str) -> bool:
-    """Smoke gate: the artifact must carry passing fsdp shrink verdicts
-    (the inequality itself is encoded once, in bench_comm_time.run's
-    checks — this re-reads what was actually written to disk). Returns
-    True on pass."""
+
+def _assert_artifact_verdicts(path: str) -> bool:
+    """Smoke gate: the artifact must carry passing fsdp shrink + stream
+    peak verdicts (the inequalities themselves are encoded once, in
+    bench_comm_time.run's checks — this re-reads what was actually
+    written to disk). Returns True on pass."""
     with open(path) as f:
         artifact = json.load(f)
     by_shard = {r["shard"]: r for r in artifact["fsdp"]}
-    fsdp_checks = [
-        c for c in artifact["checks"] if c["name"].startswith("fsdp shard=")
+    gated = [
+        c for c in artifact["checks"]
+        if c["name"].startswith(("fsdp shard=", "stream shard="))
     ]
-    ok = len(fsdp_checks) >= 2
-    for c in fsdp_checks:
+    ok = len(gated) >= 4
+    for c in gated:
         ok = ok and c["ok"]
         print(f"  [{'PASS' if c['ok'] else 'FAIL'}] artifact: {c['name']}",
               file=sys.stderr)
@@ -50,6 +73,67 @@ def _assert_fsdp_shrink(path: str) -> bool:
                for s, r in sorted(by_shard.items())}),
         file=sys.stderr,
     )
+    print(
+        "  peak transient bytes by shard (streamed vs monolithic): "
+        + str({s: (r["peak_transient_bytes_streamed"],
+                   r["peak_transient_bytes_monolithic"])
+               for s, r in sorted(by_shard.items())}),
+        file=sys.stderr,
+    )
+    return ok
+
+
+def _compare_against_baseline(baseline: dict, fresh_path: str) -> bool:
+    """Fail if any gated byte metric regressed >5% vs the baseline
+    artifact, OR if the fresh artifact dropped a row/field the baseline
+    gates on (a regression confined to a no-longer-measured config must
+    not ship green). Rows/fields only the *fresh* side has are skipped
+    with a note — forward format evolution is fine until the baseline
+    is refreshed. Returns True on pass."""
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    base_rows = {
+        (r["arch"], r["shard"]): r for r in baseline.get("fsdp", [])
+    }
+    fresh_rows = {
+        (r["arch"], r["shard"]): r for r in fresh.get("fsdp", [])
+    }
+    ok = True
+    compared = 0
+    for key, r in fresh_rows.items():
+        base = base_rows.get(key)
+        if base is None:
+            print(f"  [SKIP] compare: no baseline row for new config {key}",
+                  file=sys.stderr)
+            continue
+        for field in REGRESSION_FIELDS:
+            if field not in base:
+                print(f"  [SKIP] compare {key}: baseline lacks {field}",
+                      file=sys.stderr)
+                continue
+            if field not in r:
+                print(f"  [FAIL] compare {key}: fresh artifact dropped "
+                      f"{field} the baseline gates on", file=sys.stderr)
+                ok = False
+                continue
+            compared += 1
+            good = r[field] <= base[field] * REGRESSION_TOLERANCE
+            ok = ok and good
+            print(
+                f"  [{'PASS' if good else 'FAIL'}] compare {key} {field}: "
+                f"{r[field]} vs baseline {base[field]} "
+                f"(limit {REGRESSION_TOLERANCE:.2f}x)",
+                file=sys.stderr,
+            )
+    for key in base_rows:
+        if key not in fresh_rows:
+            print(f"  [FAIL] compare: baseline row {key} missing from the "
+                  "fresh artifact — bench coverage shrank", file=sys.stderr)
+            ok = False
+    if compared == 0:
+        print("  [FAIL] compare: no overlapping metrics with the baseline",
+              file=sys.stderr)
+        ok = False
     return ok
 
 
@@ -59,9 +143,20 @@ def main() -> None:
     ap.add_argument("--only", nargs="*", default=[])
     ap.add_argument("--smoke", action="store_true",
                     help="fast analytic benches only (CI)")
+    ap.add_argument("--compare", default="",
+                    help="baseline BENCH_comm_time.json: fail if a gated "
+                         "byte metric regressed >5% (read before the run "
+                         "overwrites the artifact)")
     args = ap.parse_args()
     if args.smoke and not args.only:
         args.only = list(SMOKE)
+
+    baseline = None
+    if args.compare:
+        # read up front: the baseline may be the very file the benches
+        # are about to overwrite
+        with open(args.compare) as f:
+            baseline = json.load(f)
 
     from benchmarks import (
         bench_comm_time,
@@ -78,13 +173,16 @@ def main() -> None:
     }
     print("name,us_per_call,derived")
     failed = False
+    npass = ntotal = 0
     for name, fn in benches.items():
         if name in args.skip or (args.only and name not in args.only):
             continue
         try:
             rows, checks, us = fn()
-            npass = sum(ok for _, ok in checks)
-            derived = f"{npass}/{len(checks)} claims pass; {len(rows)} rows"
+            good = sum(ok for _, ok in checks)
+            npass += good
+            ntotal += len(checks)
+            derived = f"{good}/{len(checks)} claims pass; {len(rows)} rows"
             print(f"{name},{us:.1f},{derived}")
             for cname, ok in checks:
                 print(f"  [{'PASS' if ok else 'FAIL'}] {cname}",
@@ -95,15 +193,40 @@ def main() -> None:
             failed = True
             print(f"{name},nan,ERROR")
             traceback.print_exc()
-    if args.smoke and "comm_time" in args.only and "comm_time" not in args.skip:
-        artifact = os.path.join("benchmarks", "results",
-                                "BENCH_comm_time.json")
+
+    ran_comm_time = (
+        "comm_time" not in args.skip
+        and (not args.only or "comm_time" in args.only)
+    )
+    compare_verdict = "not requested"
+    if ran_comm_time:
         try:
-            if not _assert_fsdp_shrink(artifact):
+            if args.smoke and not _assert_artifact_verdicts(
+                COMM_TIME_ARTIFACT
+            ):
                 failed = True
+            if baseline is not None:
+                good = _compare_against_baseline(baseline, COMM_TIME_ARTIFACT)
+                compare_verdict = "PASS" if good else "FAIL (>5% regression)"
+                if not good:
+                    failed = True
         except Exception:
             failed = True
+            compare_verdict = "ERROR"
             traceback.print_exc()
+    elif baseline is not None:
+        print("--compare given but comm_time did not run", file=sys.stderr)
+        failed = True
+
+    artifact = (
+        os.path.abspath(COMM_TIME_ARTIFACT)
+        if os.path.exists(COMM_TIME_ARTIFACT) else "(not written)"
+    )
+    print(
+        f"artifact: {artifact}\n"
+        f"claims: {npass}/{ntotal} pass; baseline compare: {compare_verdict}; "
+        f"overall: {'FAIL' if failed else 'PASS'}"
+    )
     if failed:
         sys.exit(1)
 

@@ -46,8 +46,6 @@ def spectral_table():
 
 
 def tiny_training_comparison():
-    import dataclasses
-
     from repro.configs.registry import get_smoke_config
     from repro.data.pipeline import DecentralizedBatches
     from repro.dist import decen_train as dt

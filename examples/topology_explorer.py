@@ -8,11 +8,9 @@ error (spectral norm).
 
 Usage: PYTHONPATH=src python examples/topology_explorer.py
 """
-import numpy as np
 
 from repro.core import (
     matching_decomposition,
-    named_graph,
     plan_matcha,
     plan_vanilla,
     random_geometric_graph,

@@ -12,9 +12,7 @@ Usage:
   PYTHONPATH=src python examples/train_decentralized.py --scale full
 """
 import argparse
-import dataclasses
 import os
-import sys
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--scale", default="tiny", choices=("tiny", "full"))
@@ -164,9 +162,9 @@ with jax.set_mesh(mesh):
             )
             sim_time += sched.comm_units(k) + 1
         if k % 20 == 0 or k == steps - 1:
-            l = float(jnp.mean(losses))
-            losses_hist.append(l)
-            print(f"step {k:4d} loss {l:.4f} "
+            loss_mean = float(jnp.mean(losses))
+            losses_hist.append(loss_mean)
+            print(f"step {k:4d} loss {loss_mean:.4f} "
                   f"consensus {float(consensus(params)):.2e} "
                   f"sim_time {sim_time:.0f}u")
 

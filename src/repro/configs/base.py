@@ -7,7 +7,7 @@ argument). One file per assigned architecture lives next to this module;
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -19,7 +19,7 @@ symmetric graphs.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import Sequence
 
 import numpy as np
 

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import FrozenSet, Sequence, Tuple
+from typing import FrozenSet, Tuple
 
 import numpy as np
 

@@ -6,11 +6,11 @@ and the single entry point the distributed runtime consumes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 
-from repro.core.alpha import AlphaSolution, optimize_alpha, spectral_norm_rho
+from repro.core.alpha import AlphaSolution, optimize_alpha
 from repro.core.budget import (
     BudgetSolution,
     expected_laplacians,
@@ -22,7 +22,6 @@ from repro.core.topology import (
     TopologySchedule,
     matcha_schedule,
     periodic_schedule,
-    vanilla_schedule,
 )
 
 

@@ -14,7 +14,7 @@ Also provides the two baselines used throughout the paper:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 

@@ -21,11 +21,20 @@ the shard count (zero-padded tail), so a bucket splits into S equal
 contiguous shards and one node keeps exactly one ``(size // S,)`` slice
 per bucket. ``ravel_stacked``/``unravel_stacked`` are the node-stacked
 (leading node dim) variants used by gather-on-save / scatter-on-restore.
+
+The streaming FSDP mode needs buckets that follow the *execution*
+structure rather than a byte target: one bucket per layer group (a
+transformer block, the embedding tables, the head), so the train step
+can all-gather group g+1 while computing group g and never holds more
+than one group's full-size view. ``plan_group_buckets`` builds that
+layout: a ``GroupedPlan`` is an ordered tuple of named single-bucket
+``BucketPlan``s (``plan_buckets`` with ``target_bytes=None`` packs a
+whole subtree into exactly one bucket).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -68,7 +77,10 @@ def _leaf_size(shape: Tuple[int, ...]) -> int:
 
 
 def plan_buckets(
-    tree: PyTree, *, target_bytes: int = DEFAULT_TARGET_BYTES, pad_to: int = 1
+    tree: PyTree,
+    *,
+    target_bytes: Optional[int] = DEFAULT_TARGET_BYTES,
+    pad_to: int = 1,
 ) -> BucketPlan:
     """Greedy contiguous packing of the float leaves of ``tree``.
 
@@ -77,18 +89,22 @@ def plan_buckets(
     appending it would push the current bucket past ``target_bytes`` of
     fp32, so no bucket exceeds the target unless a single leaf does; an
     oversized leaf gets a bucket of its own rather than being split,
-    keeping unravel a pure reshape.
+    keeping unravel a pure reshape. ``target_bytes=None`` removes the
+    byte target entirely: every float leaf lands in one single bucket
+    (the per-group layout of ``plan_group_buckets``).
 
     ``pad_to`` rounds every bucket size up to a multiple (zero-padded at
     the tail by ``ravel``), so buckets divide evenly into ``pad_to``
     contiguous shards — the layout contract of ``repro.dist.fsdp``.
     """
-    if target_bytes <= 0:
+    if target_bytes is not None and target_bytes <= 0:
         raise ValueError(f"target_bytes must be positive, got {target_bytes}")
     if pad_to < 1:
         raise ValueError(f"pad_to must be >= 1, got {pad_to}")
     leaves, treedef = jax.tree.flatten(tree)
-    target_elems = max(1, target_bytes // 4)
+    target_elems = (
+        None if target_bytes is None else max(1, target_bytes // 4)
+    )
 
     shapes, is_float, leaf_bucket, leaf_offset = [], [], [], []
     bucket_sizes: list = []
@@ -103,7 +119,10 @@ def plan_buckets(
             leaf_offset.append(-1)
             continue
         size = _leaf_size(shape)
-        if not bucket_sizes or (fill > 0 and fill + size > target_elems):
+        overflow = (
+            target_elems is not None and fill > 0 and fill + size > target_elems
+        )
+        if not bucket_sizes or overflow:
             bucket_sizes.append(0)
             fill = 0
         leaf_bucket.append(len(bucket_sizes) - 1)
@@ -289,3 +308,77 @@ def unravel_stacked(
         n = buckets[b].shape[0]
         out.append(buckets[b][:, off:off + size].reshape((n,) + shape))
     return jax.tree.unflatten(plan.treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Layer-grouped buckets (streaming FSDP layout)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class GroupedPlan:
+    """An ordered set of named single-bucket plans: bucket i holds the
+    whole float subtree of layer group i (one transformer block, the
+    embedding tables, the head, ...), padded shard-divisible.
+
+    The bucket tuple a ``GroupedPlan`` describes is layout-compatible
+    with a ``BucketPlan``'s (a flat tuple of contiguous fp32 1-D
+    buffers), so the gossip / optimizer / checkpoint machinery that
+    iterates buckets works on either; only materialization differs —
+    a streamed step all-gathers one group bucket at a time instead of
+    every bucket up front.
+    """
+
+    names: Tuple[str, ...]
+    plans: Tuple[BucketPlan, ...]        # one single-bucket plan per group
+
+    def __post_init__(self):
+        if len(self.names) != len(self.plans):
+            raise ValueError(
+                f"{len(self.names)} group names but {len(self.plans)} plans"
+            )
+        for name, plan in zip(self.names, self.plans):
+            if plan.num_buckets != 1:
+                raise ValueError(
+                    f"group {name!r} planned {plan.num_buckets} buckets; "
+                    "grouped plans require exactly one bucket per group"
+                )
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.plans)
+
+    @property
+    def bucket_sizes(self) -> Tuple[int, ...]:
+        return tuple(p.bucket_sizes[0] for p in self.plans)
+
+    @property
+    def total_elements(self) -> int:
+        return sum(self.bucket_sizes)
+
+    @property
+    def max_group_elements(self) -> int:
+        return max(self.bucket_sizes) if self.plans else 0
+
+
+def plan_group_buckets(
+    named_trees: Sequence[Tuple[str, PyTree]], *, pad_to: int = 1
+) -> GroupedPlan:
+    """One bucket per named subtree, in the given (execution) order.
+
+    Each subtree is packed with ``target_bytes=None`` so a group is a
+    single contiguous bucket regardless of its size — the streaming
+    train step issues exactly one all-gather per group. A group whose
+    subtree has no float leaf would have nothing to gather and is
+    rejected (every parameter must belong to exactly one group).
+    """
+    names, plans = [], []
+    for name, sub in named_trees:
+        plan = plan_buckets(sub, target_bytes=None, pad_to=pad_to)
+        if plan.num_buckets != 1:
+            raise ValueError(
+                f"layer group {name!r} has no float leaves to bucket"
+            )
+        names.append(str(name))
+        plans.append(plan)
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate layer-group names in {names}")
+    return GroupedPlan(names=tuple(names), plans=tuple(plans))

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-import repro  # ensures the jax.shard_map compat shim is installed
+import repro  # ensures the jax.shard_map compat shim is installed  # noqa: F401
 from repro.configs.base import ModelConfig
 from repro.dist import bucketing
 from repro.dist import sharding as shd
@@ -183,7 +183,14 @@ class GossipState:
     regardless) keeps exactly one fp32 param copy per node in flight
     instead of the send/recv pair.
 
-    Leaves are node-stacked ``(nodes, bucket_size)`` fp32.
+    ``delta`` is one buffer per bucket of whatever bucket layout the
+    run uses — byte-target buckets here (node-stacked
+    ``(nodes, bucket_size)`` fp32), shard slices
+    ``(nodes, S, bucket_size // S)`` in the FSDP runtime, where a
+    "bucket" is either a byte-target bucket (monolithic ``FsdpLayout``)
+    or one layer group (streaming ``FsdpStreamLayout``). The container
+    and the flush builders are agnostic to which: they only iterate the
+    tuple.
     """
 
     delta: Tuple[jax.Array, ...]

@@ -36,11 +36,31 @@ Execution strategies mirror the replicated runtime: ``"sequential"``
 analogue of ``gossip_mode="masked"``), ``"overlap"`` (one-step-delayed
 exchange carried in the same ``GossipState`` container, flushed by
 ``make_fsdp_gossip_flush``), and ``"none"`` (local SGD only).
+
+Two materialization strategies choose how the fwd/bwd sees the params:
+
+``FsdpLayout`` (monolithic): one all-gather re-materializes the whole
+model before the fwd — peak transient memory O(model) per device and
+the gather serializes in front of the compute.
+
+``FsdpStreamLayout`` (streaming, ``make_stream_layout``): buckets follow
+the model's *layer groups* (``Model.param_group_specs`` — one group per
+transformer block plus embed/encoder/head groups), and the step walks
+``Model.stream_stages`` gathering one group at a time. Each stage is a
+remat closure over the group's *shards*, so the backward pass
+re-gathers the group instead of keeping its full-size view live, and
+the gathered grads arrive pre-reduce-scattered through the all-gather
+transpose (``psum_scatter`` over the shard axis) — peak transient
+memory drops to O(largest group) and each gather can hide behind the
+previous block's compute. Resident state (shards, optimizer, gossip)
+is identical in both layouts: a flat tuple of contiguous fp32 bucket
+shards, so gossip, checkpoints and the overlap ``GossipState`` are
+layout-agnostic.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Tuple
+from typing import Any, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -49,7 +69,6 @@ from jax.sharding import PartitionSpec as P
 
 import repro  # ensures the jax.shard_map compat shim is installed  # noqa: F401
 from repro.dist import bucketing
-from repro.dist import sharding as shd
 from repro.dist.decen_train import DistSpec, GossipState
 from repro.dist.gossip import (
     delayed_delta,
@@ -64,11 +83,53 @@ PyTree = Any
 FSDP_GOSSIP_MODES = ("sequential", "overlap", "none")
 
 
+def _cast_like(tree: PyTree, abs_like: PyTree) -> PyTree:
+    """fp32 unravel output -> declared storage dtypes (shapes untouched,
+    so this also works leafwise on node-stacked trees)."""
+    return jax.tree.map(lambda x, a: x.astype(a.dtype), tree, abs_like)
+
+
+def _group_subtree(tree: PyTree, group, *, stacked: bool = False) -> PyTree:
+    """Select one layer group out of a (possibly node-stacked) param
+    tree: the group's top-level keys, sliced to ``group.layer`` along
+    the segment's stacked layer dim for unrolled-block groups."""
+    sub = {k: tree[k] for k in group.keys}
+    if group.layer is not None:
+        idx = (slice(None), group.layer) if stacked else (group.layer,)
+        sub = jax.tree.map(lambda a: a[idx], sub)
+    return sub
+
+
+def _join_group_subtrees(
+    groups, subtrees: Tuple[PyTree, ...], *, stacked: bool = False
+) -> PyTree:
+    """Inverse of ``_group_subtree`` over a full group cover: re-stack
+    the per-layer block slices along the segment layer dim and merge the
+    whole-tree groups back into one top-level dict."""
+    out: dict = {}
+    sliced: dict = {}
+    for g, sub in zip(groups, subtrees):
+        if g.layer is None:
+            out.update(sub)
+        else:
+            for k in g.keys:
+                sliced.setdefault(k, {})[g.layer] = sub[k]
+    axis = 1 if stacked else 0
+    for k, by_layer in sliced.items():
+        ordered = [by_layer[i] for i in range(len(by_layer))]
+        out[k] = jax.tree.map(
+            lambda *xs: jnp.stack(xs, axis=axis), *ordered
+        )
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class FsdpLayout:
     """Static sharded-replica layout: the bucket plan (padded to the
     shard factor) plus the abstract per-node param tree it was built
-    from (shapes + storage dtypes for the materialize cast)."""
+    from (shapes + storage dtypes for the materialize cast). Buckets are
+    byte-target-sized; the train step re-materializes the whole model
+    with one all-gather per bucket (monolithic strategy)."""
 
     plan: bucketing.BucketPlan
     abs_local: PyTree             # ShapeDtypeStructs of one node's params
@@ -83,14 +144,92 @@ class FsdpLayout:
     def per_device_elements(self) -> int:
         return sum(self.shard_sizes)
 
+    # -- bucket tuple <-> param tree (local / node-stacked) ------------------
+    def ravel(self, tree: PyTree) -> Tuple[jax.Array, ...]:
+        return bucketing.ravel(self.plan, tree)
 
-def make_layout(
-    model,
-    spec: DistSpec,
-    *,
-    target_bytes: int = bucketing.DEFAULT_TARGET_BYTES,
-) -> FsdpLayout:
-    """Bucket layout of one node's parameters, shard-divisible."""
+    def unravel_cast(self, buckets: Tuple[jax.Array, ...]) -> PyTree:
+        return _cast_like(
+            bucketing.unravel(self.plan, buckets), self.abs_local
+        )
+
+    def ravel_stacked(self, tree: PyTree) -> Tuple[jax.Array, ...]:
+        return bucketing.ravel_stacked(self.plan, tree)
+
+    def unravel_stacked(self, buckets: Tuple[jax.Array, ...]) -> PyTree:
+        """fp32 node-stacked tree (optimizer-slot layout — no storage
+        cast)."""
+        return bucketing.unravel_stacked(self.plan, buckets)
+
+    def unravel_stacked_cast(self, buckets: Tuple[jax.Array, ...]) -> PyTree:
+        return _cast_like(self.unravel_stacked(buckets), self.abs_local)
+
+
+@dataclasses.dataclass(frozen=True)
+class FsdpStreamLayout:
+    """Layer-grouped sharded-replica layout (streaming strategy): bucket
+    i holds layer group i (``Model.param_group_specs`` order), so the
+    train step can gather group g+1 while computing group g and peak
+    transient memory is O(largest group). Same resident bucket-shard
+    tuple contract as ``FsdpLayout`` — gossip/opt/checkpoint code takes
+    either."""
+
+    plan: bucketing.GroupedPlan
+    groups: Tuple[Any, ...]       # Model.param_group_specs() entries
+    abs_local: PyTree
+    abs_groups: Tuple[PyTree, ...]
+    num_nodes: int
+    num_shards: int
+
+    @property
+    def shard_sizes(self) -> Tuple[int, ...]:
+        return tuple(s // self.num_shards for s in self.plan.bucket_sizes)
+
+    @property
+    def per_device_elements(self) -> int:
+        return sum(self.shard_sizes)
+
+    @property
+    def group_names(self) -> Tuple[str, ...]:
+        return self.plan.names
+
+    # -- bucket tuple <-> param tree (local / node-stacked) ------------------
+    def ravel(self, tree: PyTree) -> Tuple[jax.Array, ...]:
+        return tuple(
+            bucketing.ravel(p, _group_subtree(tree, g))[0]
+            for g, p in zip(self.groups, self.plan.plans)
+        )
+
+    def unravel_cast(self, buckets: Tuple[jax.Array, ...]) -> PyTree:
+        subs = tuple(
+            _cast_like(bucketing.unravel(p, (b,)), a)
+            for p, b, a in zip(self.plan.plans, buckets, self.abs_groups)
+        )
+        return _join_group_subtrees(self.groups, subs)
+
+    def ravel_stacked(self, tree: PyTree) -> Tuple[jax.Array, ...]:
+        return tuple(
+            bucketing.ravel_stacked(p, _group_subtree(tree, g, stacked=True))[0]
+            for g, p in zip(self.groups, self.plan.plans)
+        )
+
+    def unravel_stacked(self, buckets: Tuple[jax.Array, ...]) -> PyTree:
+        """fp32 node-stacked tree (optimizer-slot layout — no storage
+        cast)."""
+        subs = tuple(
+            bucketing.unravel_stacked(p, (b,))
+            for p, b in zip(self.plan.plans, buckets)
+        )
+        return _join_group_subtrees(self.groups, subs, stacked=True)
+
+    def unravel_stacked_cast(self, buckets: Tuple[jax.Array, ...]) -> PyTree:
+        return _cast_like(self.unravel_stacked(buckets), self.abs_local)
+
+
+AnyFsdpLayout = Union[FsdpLayout, FsdpStreamLayout]
+
+
+def _abs_params(model) -> PyTree:
     abs_local = jax.eval_shape(lambda: model.init(jax.random.key(0)))
     for leaf in jax.tree.leaves(abs_local):
         if not jnp.issubdtype(leaf.dtype, jnp.floating):
@@ -98,6 +237,18 @@ def make_layout(
                 "fsdp mode shards every param leaf into the fp32 buckets; "
                 f"non-float leaf of dtype {leaf.dtype} cannot be sharded"
             )
+    return abs_local
+
+
+def make_layout(
+    model,
+    spec: DistSpec,
+    *,
+    target_bytes: int = bucketing.DEFAULT_TARGET_BYTES,
+) -> FsdpLayout:
+    """Monolithic bucket layout of one node's parameters,
+    shard-divisible."""
+    abs_local = _abs_params(model)
     plan = bucketing.plan_buckets(
         abs_local, target_bytes=target_bytes, pad_to=spec.num_shards
     )
@@ -109,10 +260,51 @@ def make_layout(
     )
 
 
+def param_group_subtrees(
+    model, *, abs_local: PyTree = None, groups=None
+) -> Tuple[Tuple[str, PyTree], ...]:
+    """(name, abstract subtree) per layer group of ``model`` — the
+    input ``bucketing.plan_group_buckets`` takes. Public so benches and
+    tools can reason about the streamed layout (group count, largest
+    group) without building a mesh or a ``DistSpec``. Pass ``abs_local``
+    / ``groups`` when already computed — the ``model.init`` eval_shape
+    is the expensive part of layout construction on large configs and
+    must not be traced twice."""
+    if abs_local is None:
+        abs_local = _abs_params(model)
+    if groups is None:
+        groups = tuple(model.param_group_specs())
+    return tuple(
+        (g.name, jax.eval_shape(lambda t, _g=g: _group_subtree(t, _g),
+                                abs_local))
+        for g in groups
+    )
+
+
+def make_stream_layout(model, spec: DistSpec) -> FsdpStreamLayout:
+    """Layer-grouped bucket layout: one shard-divisible bucket per
+    entry of ``model.param_group_specs()`` (execution order)."""
+    abs_local = _abs_params(model)
+    groups = tuple(model.param_group_specs())
+    named = param_group_subtrees(model, abs_local=abs_local, groups=groups)
+    abs_groups = tuple(a for _, a in named)
+    gplan = bucketing.plan_group_buckets(
+        list(named), pad_to=spec.num_shards,
+    )
+    return FsdpStreamLayout(
+        plan=gplan,
+        groups=groups,
+        abs_local=abs_local,
+        abs_groups=abs_groups,
+        num_nodes=spec.num_nodes,
+        num_shards=spec.num_shards,
+    )
+
+
 # ---------------------------------------------------------------------------
 # State init + shardings: every array carries leading (nodes, shards) dims
 # ---------------------------------------------------------------------------
-def _stack2(layout: FsdpLayout, tree: PyTree) -> PyTree:
+def _stack2(layout: AnyFsdpLayout, tree: PyTree) -> PyTree:
     n, s = layout.num_nodes, layout.num_shards
     return jax.tree.map(
         lambda a: jnp.broadcast_to(a[None, None], (n, s) + a.shape), tree
@@ -120,13 +312,13 @@ def _stack2(layout: FsdpLayout, tree: PyTree) -> PyTree:
 
 
 def init_fsdp_params(
-    model, layout: FsdpLayout, seed: int = 0
+    model, layout: AnyFsdpLayout, seed: int = 0
 ) -> Tuple[jax.Array, ...]:
     """Sharded replicas of one init: per bucket ``(nodes, S, size // S)``
     fp32 — every node starts from the same point, like the replicated
     ``init_stacked_params``."""
     params = model.init(jax.random.key(seed))
-    buckets = bucketing.ravel(layout.plan, params)
+    buckets = layout.ravel(params)
     shards = bucketing.shard_buckets(buckets, layout.num_shards)
     n = layout.num_nodes
     return tuple(
@@ -134,13 +326,13 @@ def init_fsdp_params(
     )
 
 
-def _abs_shards(layout: FsdpLayout) -> Tuple[jax.ShapeDtypeStruct, ...]:
+def _abs_shards(layout: AnyFsdpLayout) -> Tuple[jax.ShapeDtypeStruct, ...]:
     return tuple(
         jax.ShapeDtypeStruct((sz,), jnp.float32) for sz in layout.shard_sizes
     )
 
 
-def init_fsdp_opt_state(opt: Optimizer, layout: FsdpLayout) -> PyTree:
+def init_fsdp_opt_state(opt: Optimizer, layout: AnyFsdpLayout) -> PyTree:
     """Optimizer state over the param *shards*: param-shaped slots
     (velocity, mu, nu) are per-shard fp32 slices, scalar slots (step)
     broadcast — all stacked ``(nodes, S, ...)``."""
@@ -150,20 +342,20 @@ def init_fsdp_opt_state(opt: Optimizer, layout: FsdpLayout) -> PyTree:
     return _stack2(layout, opt.init(zeros))
 
 
-def fsdp_param_pspecs(spec: DistSpec, layout: FsdpLayout):
+def fsdp_param_pspecs(spec: DistSpec, layout: AnyFsdpLayout):
     nodes = spec.nodes_axis
     return tuple(
         P(nodes, "shard") for _ in range(layout.plan.num_buckets)
     )
 
 
-def fsdp_opt_pspecs(opt: Optimizer, spec: DistSpec, layout: FsdpLayout):
+def fsdp_opt_pspecs(opt: Optimizer, spec: DistSpec, layout: AnyFsdpLayout):
     state_abs = jax.eval_shape(opt.init, _abs_shards(layout))
     nodes = spec.nodes_axis
     return jax.tree.map(lambda _: P(nodes, "shard"), state_abs)
 
 
-def init_fsdp_gossip_state(layout: FsdpLayout) -> GossipState:
+def init_fsdp_gossip_state(layout: AnyFsdpLayout) -> GossipState:
     """Empty in-flight buffer for the overlap mode, on the shard slices."""
     n, s = layout.num_nodes, layout.num_shards
     return GossipState(
@@ -173,7 +365,7 @@ def init_fsdp_gossip_state(layout: FsdpLayout) -> GossipState:
     )
 
 
-def fsdp_gossip_state_pspecs(spec: DistSpec, layout: FsdpLayout) -> GossipState:
+def fsdp_gossip_state_pspecs(spec: DistSpec, layout: AnyFsdpLayout) -> GossipState:
     nodes = spec.nodes_axis
     return GossipState(
         delta=tuple(P(nodes, "shard") for _ in range(layout.plan.num_buckets))
@@ -201,46 +393,47 @@ def consensus_distance_sharded(shards: Tuple[jax.Array, ...]):
 # ---------------------------------------------------------------------------
 # Gather / scatter: checkpoint + eval interop with the replicated layout
 # ---------------------------------------------------------------------------
-def gather_params(layout: FsdpLayout, shards: Tuple[jax.Array, ...]) -> PyTree:
+def gather_params(
+    layout: AnyFsdpLayout, shards: Tuple[jax.Array, ...]
+) -> PyTree:
     """Sharded replicas back to the node-stacked param tree (leaves cast
     to their declared storage dtype) — the exact layout the replicated
     runtime and ``checkpoint.ckpt.save_run`` use, so fsdp checkpoints are
-    interchangeable with replicated ones at any shard factor."""
+    interchangeable with replicated ones at any shard factor AND at any
+    bucket layout (monolithic or layer-grouped): the on-disk format is
+    always the gathered stacked tree."""
     full = bucketing.unshard_buckets(shards)          # (nodes, size) each
-    tree = bucketing.unravel_stacked(layout.plan, full)
-    return jax.tree.map(
-        lambda x, a: x.astype(a.dtype), tree, layout.abs_local
-    )
+    return layout.unravel_stacked_cast(full)
 
 
 def scatter_params(
-    layout: FsdpLayout, stacked_params: PyTree
+    layout: AnyFsdpLayout, stacked_params: PyTree
 ) -> Tuple[jax.Array, ...]:
     """Node-stacked param tree to sharded replicas (restore path)."""
-    buckets = bucketing.ravel_stacked(layout.plan, stacked_params)
+    buckets = layout.ravel_stacked(stacked_params)
     return bucketing.shard_buckets(buckets, layout.num_shards)
 
 
-def _is_bucket_slot(layout: FsdpLayout, sub: PyTree) -> bool:
+def _is_bucket_slot(layout: AnyFsdpLayout, sub: PyTree) -> bool:
     probe = tuple(range(layout.plan.num_buckets))
     return jax.tree.structure(sub) == jax.tree.structure(probe)
 
 
-def gather_opt_state(layout: FsdpLayout, sharded_state: PyTree) -> PyTree:
+def gather_opt_state(layout: AnyFsdpLayout, sharded_state: PyTree) -> PyTree:
     """Sharded optimizer state to the replicated stacked layout
     (param-shaped slots back to leaf trees, scalar slots to (nodes,))."""
     out = {}
     for key, sub in sharded_state.items():
         if _is_bucket_slot(layout, sub):
             full = bucketing.unshard_buckets(tuple(sub))
-            out[key] = bucketing.unravel_stacked(layout.plan, full)
+            out[key] = layout.unravel_stacked(full)
         else:
             out[key] = jax.tree.map(lambda a: a[:, 0], sub)
     return out
 
 
 def scatter_opt_state(
-    layout: FsdpLayout, opt: Optimizer, stacked_state: PyTree
+    layout: AnyFsdpLayout, opt: Optimizer, stacked_state: PyTree
 ) -> PyTree:
     """Replicated stacked optimizer state to the sharded layout."""
     params_struct = jax.tree.structure(layout.abs_local)
@@ -248,7 +441,7 @@ def scatter_opt_state(
     out = {}
     for key, sub in stacked_state.items():
         if jax.tree.structure(sub) == params_struct:
-            buckets = bucketing.ravel_stacked(layout.plan, sub)
+            buckets = layout.ravel_stacked(sub)
             out[key] = bucketing.shard_buckets(buckets, s)
         else:
             out[key] = jax.tree.map(
@@ -269,10 +462,50 @@ def _materialize(layout: FsdpLayout, shards: Tuple[jax.Array, ...]) -> PyTree:
     full = tuple(
         jax.lax.all_gather(s, "shard", tiled=True) for s in shards
     )
-    tree = bucketing.unravel(layout.plan, full)
-    return jax.tree.map(
-        lambda x, a: x.astype(a.dtype), tree, layout.abs_local
-    )
+    return layout.unravel_cast(full)
+
+
+def _materialize_group(
+    layout: FsdpStreamLayout, gi: int, shard: jax.Array
+) -> PyTree:
+    """all-gather ONE layer group's bucket shard and unravel it to the
+    group's param subtree in storage dtype. The only full-size view the
+    streamed step ever holds is one group's."""
+    full = jax.lax.all_gather(shard, "shard", tiled=True)
+    sub = bucketing.unravel(layout.plan.plans[gi], (full,))
+    return _cast_like(sub, layout.abs_groups[gi])
+
+
+def _stream_loss(
+    model, layout: FsdpStreamLayout, shards: Tuple[jax.Array, ...], batch
+):
+    """Streamed fwd+loss over the model's layer groups.
+
+    Each stage runs as a ``jax.checkpoint`` closure whose inputs are the
+    carry and the *shards* of the groups it reads — the all-gather
+    happens inside the remat boundary, so the backward pass re-gathers
+    the group instead of keeping its full-size view live, and the
+    cotangent flowing back into a shard is the group's grad already
+    psum-scattered over the shard axis (the all-gather transpose): the
+    per-group reduce-scatter the monolithic path issues explicitly.
+    The gathers of later stages depend only on the resident shards, so
+    the latency-hiding scheduler can overlap group g+1's gather with
+    group g's compute.
+    """
+    stages = model.stream_stages(batch)
+    carry = {"batch": batch}
+    for st in stages:
+        def run(carry, *gshards, _st=st):
+            trees = tuple(
+                _materialize_group(layout, gi, sh)
+                for gi, sh in zip(_st.group_ids, gshards)
+            )
+            return _st.apply(carry, trees)
+
+        carry = jax.checkpoint(run)(
+            carry, *(shards[gi] for gi in st.group_ids)
+        )
+    return carry["loss"], carry["metrics"]
 
 
 def _reduce_scatter_grads(
@@ -283,7 +516,7 @@ def _reduce_scatter_grads(
     (mean over sub-batches == the full-batch grad of the token-mean
     loss, since the batch splits evenly)."""
     s = layout.num_shards
-    buckets = bucketing.ravel(layout.plan, grads)
+    buckets = layout.ravel(grads)
     out = []
     for g in buckets:
         r = jax.lax.psum_scatter(g, "shard", scatter_dimension=0, tiled=True)
@@ -310,12 +543,22 @@ def make_fsdp_train_step(
     opt: Optimizer,
     plan,                                 # repro.core.MatchaPlan
     spec: DistSpec,
-    layout: FsdpLayout,
+    layout: AnyFsdpLayout,
     *,
     gossip_mode: str = "sequential",
     grad_clip: float = 0.0,
 ):
     """Build the jitted sharded-replica decentralized step.
+
+    The fwd/bwd materialization strategy follows the layout:
+    ``FsdpLayout`` re-materializes the whole model with one monolithic
+    all-gather; ``FsdpStreamLayout`` walks the model's layer groups,
+    gathering one group at a time (O(largest group) peak transient
+    memory, per-group reduce-scatter through the remat'd all-gather
+    transpose). Everything around the fwd/bwd — optimizer on the
+    shards, gossip on the bucket shards, the overlap ``GossipState`` —
+    is identical in both, because both layouts expose the same flat
+    bucket-shard tuple.
 
     For ``gossip_mode`` in ("sequential", "none"):
 
@@ -354,15 +597,31 @@ def make_fsdp_train_step(
     manual = set(spec.node_axes) | {"shard"}
     perms = np.asarray(plan.permutations)
     alpha = float(plan.alpha)
+    streaming = isinstance(layout, FsdpStreamLayout)
+    num_shards = layout.num_shards
 
-    def sgd_half(ps, s, batch):
-        # batch local view is (1 node, B/S, ...): strip the node dim
-        b = jax.tree.map(lambda a: a[0], batch)
+    def grads_of(ps, b):
+        if streaming:
+            # grads arrive per group, already psum-scattered (summed)
+            # over the shard axis by the all-gather transpose; the /S
+            # turns the sum of the S sub-batch grads into their mean —
+            # the same arithmetic _reduce_scatter_grads applies.
+            (loss, metrics), g = jax.value_and_grad(
+                lambda sh: _stream_loss(model, layout, sh, b), has_aux=True
+            )(ps)
+            if num_shards > 1:
+                g = tuple(x / num_shards for x in g)
+            return loss, metrics, g
         p = _materialize(layout, ps)
         (loss, metrics), grads = jax.value_and_grad(
             model.loss, has_aux=True
         )(p, b)
-        g = _reduce_scatter_grads(layout, grads)
+        return loss, metrics, _reduce_scatter_grads(layout, grads)
+
+    def sgd_half(ps, s, batch):
+        # batch local view is (1 node, B/S, ...): strip the node dim
+        b = jax.tree.map(lambda a: a[0], batch)
+        loss, metrics, g = grads_of(ps, b)
         if grad_clip:
             g = _clip_sharded(g, grad_clip)
         updates, s = opt.update(g, s, ps)
@@ -429,7 +688,7 @@ def make_fsdp_train_step(
     return jax.jit(stepped)
 
 
-def make_fsdp_gossip_flush(plan, spec: DistSpec, layout: FsdpLayout):
+def make_fsdp_gossip_flush(plan, spec: DistSpec, layout: AnyFsdpLayout):
     """Land the exchange still in flight after the last overlap step,
     directly on the shards: ``shards = flush(shards, gstate)`` — the
     sharded analogue of ``decen_train.make_gossip_flush`` (same

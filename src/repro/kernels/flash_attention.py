@@ -105,9 +105,10 @@ def _flash_kernel(
 
     @pl.when(ik == num_k_blocks - 1)
     def _finalize():
-        l = l_scratch[...]
-        l = jnp.where(l == 0.0, 1.0, l)   # fully-masked rows -> zeros
-        o_ref[0, 0] = (acc_scratch[...] / l).astype(o_ref.dtype)
+        denom = l_scratch[...]
+        # fully-masked rows -> zeros
+        denom = jnp.where(denom == 0.0, 1.0, denom)
+        o_ref[0, 0] = (acc_scratch[...] / denom).astype(o_ref.dtype)
 
 
 def flash_attention(

@@ -9,7 +9,6 @@ choice per backend.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

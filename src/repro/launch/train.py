@@ -18,6 +18,15 @@ shards directly (1/N of the bytes per matching). Checkpoints are
 gathered on save, so the same directory restores into any shard factor
 (and into the replicated runtime).
 
+``--stream-layers`` (default ON whenever ``--shard > 1``) buckets the
+shards per *layer group* instead of per byte target and streams the
+fwd/bwd: each transformer block's group is all-gathered just-in-time
+and its full-size view dropped when the block finishes (re-gathered in
+the bwd), so peak transient memory is O(largest group) instead of
+O(model). ``--no-stream-layers`` restores the monolithic gather. The
+on-disk checkpoint format is identical either way (gather-on-save), so
+runs restore across layouts freely.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch internlm2_1_8b \
       --preset tiny --graph paper8 --nodes 8 --budget 0.5 --steps 100
@@ -28,10 +37,8 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import os
 import time
-from typing import Optional
 
 import numpy as np
 
@@ -58,6 +65,12 @@ def main():
     ap.add_argument("--shard", type=int, default=1,
                     help="FSDP shard factor: each node keeps 1/N of the "
                          "params + optimizer state (N=1: full replicas)")
+    ap.add_argument("--stream-layers", dest="stream_layers",
+                    action=argparse.BooleanOptionalAction, default=None,
+                    help="stream the fwd/bwd over per-layer-group buckets "
+                         "(all-gather one block at a time; peak transient "
+                         "memory O(largest group) instead of O(model)). "
+                         "Default: on when --shard > 1")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--resume", default="")
@@ -71,6 +84,11 @@ def main():
     # exchanged in-step, deltas scaled by the schedule bits); both step
     # builders accept either spelling
     use_fsdp = args.shard > 1
+    if args.stream_layers is None:
+        args.stream_layers = use_fsdp
+    if args.stream_layers and not use_fsdp:
+        raise SystemExit("--stream-layers streams the sharded-replica "
+                         "runtime; it requires --shard > 1")
     if use_fsdp and args.gossip_mode == "static":
         raise SystemExit("--shard > 1 supports --gossip-mode "
                          "sequential/masked or overlap, not static")
@@ -138,12 +156,31 @@ def main():
 
     layout = None
     if use_fsdp:
-        layout = fsdp.make_layout(model, spec)
+        layout = (
+            fsdp.make_stream_layout(model, spec) if args.stream_layers
+            else fsdp.make_layout(model, spec)
+        )
         params = fsdp.init_fsdp_params(model, layout, seed=args.seed)
         opt_state = fsdp.init_fsdp_opt_state(opt, layout)
         print(f"fsdp: shard={args.shard}, "
               f"{layout.per_device_elements * 4 / 1e6:.2f} MB params/device "
               f"(of {layout.plan.total_elements * 4 / 1e6:.2f} MB/replica)")
+        if args.stream_layers:
+            peak = layout.plan.max_group_elements
+            total = layout.plan.total_elements
+            print(f"fsdp: streaming {layout.plan.num_buckets} layer groups "
+                  f"({', '.join(layout.group_names)}); peak gathered view "
+                  f"{peak * 4 / 1e6:.2f} MB vs "
+                  f"{total * 4 / 1e6:.2f} MB monolithic")
+            if peak > 0.5 * total:
+                # a lax.scan segment streams as ONE group (the scan
+                # consumes its whole stacked subtree), so deep uniform
+                # stacks keep an O(model)-sized group unless unrolled
+                print("fsdp: WARNING largest layer group is "
+                      f"{100 * peak / total:.0f}% of the model — layer "
+                      "scanning collapsed the blocks into one group; "
+                      "set scan_layers=False on the config to restore "
+                      "per-layer streaming (at unrolled compile cost)")
     else:
         params = dt.init_stacked_params(model, spec, seed=args.seed)
         opt_state = dt.init_stacked_opt_state(opt, model, spec)
@@ -270,7 +307,8 @@ def main():
                 ckpt_lib.save_run(
                     args.ckpt_dir, eval_params(save_params),
                     eval_opt_state(opt_state), step=k + 1,
-                    extra={"shard": args.shard},
+                    extra={"shard": args.shard,
+                           "stream_layers": bool(args.stream_layers)},
                 )
 
         if gossip_mode == "overlap":
@@ -282,7 +320,8 @@ def main():
         if args.ckpt_dir:
             ckpt_lib.save_run(
                 args.ckpt_dir, eval_params(params), eval_opt_state(opt_state),
-                step=args.steps, extra={"shard": args.shard},
+                step=args.steps, extra={"shard": args.shard,
+                           "stream_layers": bool(args.stream_layers)},
             )
         if args.csv:
             os.makedirs(os.path.dirname(args.csv) or ".", exist_ok=True)

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import shard
 from repro.models.layers import activation_fn, apply_dense, declare_dense
-from repro.models.module import ParamBuilder, lecun_normal
+from repro.models.module import ParamBuilder
 
 
 # ---------------------------------------------------------------------------

@@ -10,12 +10,20 @@ Layer stacking: consecutive layers with identical structure form a
 Segments with >= SCAN_THRESHOLD layers run under ``lax.scan`` (compile
 time stays flat for 96-layer nemotron); short segments unroll. Both use
 the same per-layer code.
+
+Streaming execution: ``param_group_specs`` partitions the parameter
+tree into ordered *layer groups* keyed by param-path prefix (the embed
+tables, the encoder, one group per transformer block of an unrolled
+segment / one per scanned segment, the head), and ``stream_stages``
+exposes the forward+loss as a walk over those groups. The streaming
+FSDP runtime (``repro.dist.fsdp``) all-gathers one group at a time
+through the stage walk, so its peak transient memory is O(largest
+group) instead of O(model).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -128,6 +136,38 @@ def segment_layers(cfg: ModelConfig) -> List:
                 )
             return segs
     return plain
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamGroup:
+    """One layer group of the parameter tree (streaming unit).
+
+    ``keys`` are the top-level param-path prefixes the group covers.
+    Block groups of an *unrolled* segment additionally carry the layer
+    index into the segment's stacked leading dim (``layer``); scanned /
+    periodic segments stream as one group (their ``lax.scan`` consumes
+    the whole stacked subtree at once, so the group IS the streaming
+    granularity there).
+    """
+
+    name: str
+    keys: Tuple[str, ...]
+    segment: Optional[int] = None     # segment index for block groups
+    layer: Optional[int] = None       # layer index within an unrolled segment
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamStage:
+    """One step of the streamed forward walk: which layer groups it
+    needs (indices into ``param_group_specs()``) and how it advances the
+    carry. ``apply(carry, group_trees) -> carry`` is pure; the caller
+    owns materialization (all-gather) and remat boundaries, so the
+    backward pass re-gathers a group instead of keeping its full-size
+    view live."""
+
+    name: str
+    group_ids: Tuple[int, ...]
+    apply: Callable[[Dict[str, Any], Tuple[Any, ...]], Dict[str, Any]]
 
 
 def _has_ffn(cfg: ModelConfig, seg: Segment) -> bool:
@@ -278,7 +318,7 @@ class Model:
 
     def num_params(self) -> int:
         leaves = jax.tree.leaves(jax.eval_shape(lambda: self.init(jax.random.key(0))))
-        return int(sum(np.prod(l.shape) for l in leaves))
+        return int(sum(np.prod(leaf.shape) for leaf in leaves))
 
     # -- forward ----------------------------------------------------------------
     def _embed(self, params, tokens, prefix_embeddings):
@@ -521,6 +561,17 @@ class Model:
         return logits
 
     # -- loss -------------------------------------------------------------------
+    @staticmethod
+    def _combine_loss(
+        logits, batch: dict, aux: dict
+    ) -> Tuple[jax.Array, dict]:
+        """ce + aux-regularizer objective and its metrics — the ONE
+        definition of the training objective; the replicated ``loss``
+        and the streamed head stage must optimize the same thing."""
+        ce = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+        total = ce + 1e-2 * aux["load_balance"] + 1e-3 * aux["router_z"]
+        return total, {"ce": ce, **aux}
+
     def loss(
         self, params, batch: dict
     ) -> Tuple[jax.Array, dict]:
@@ -531,10 +582,158 @@ class Model:
             prefix_embeddings=batch.get("prefix_embeddings"),
             encoder_frames=batch.get("encoder_frames"),
         )
-        ce = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
-        total = ce + 1e-2 * aux["load_balance"] + 1e-3 * aux["router_z"]
-        metrics = {"ce": ce, **aux}
-        return total, metrics
+        return self._combine_loss(logits, batch, aux)
+
+    # -- streaming (layer-grouped) execution -----------------------------------
+    def param_group_specs(self) -> Tuple[ParamGroup, ...]:
+        """Ordered layer groups of the param tree, by path prefix.
+
+        Order is execution order (embed, encoder, blocks in depth order,
+        head) — the gather order of the streaming FSDP step. Every
+        top-level param key belongs to exactly one group; with tied
+        embeddings the head *re-gathers* the embed group for the
+        unembedding rather than duplicating the table into its own
+        group.
+        """
+        cfg = self.cfg
+        has_enc = self._enc_segment is not None
+        groups: List[ParamGroup] = []
+        embed_keys = ["embed"]
+        if cfg.pos_embed == "learned":
+            embed_keys.append("pos_embed")
+        if cfg.frontend and not has_enc:
+            embed_keys.append("frontend_proj")
+        groups.append(ParamGroup("embed", tuple(embed_keys)))
+        if has_enc:
+            enc_keys = ["encoder", "enc_final_norm"]
+            if cfg.frontend:
+                enc_keys.append("frontend_proj")
+            groups.append(ParamGroup("encoder", tuple(enc_keys)))
+        for s, seg in enumerate(self.segments):
+            key = f"blocks_{s}"
+            if isinstance(seg, PeriodicSegment) or seg.scanned:
+                # the scan consumes the whole stacked subtree at once
+                groups.append(ParamGroup(key, (key,), segment=s))
+            else:
+                for i in range(seg.count):
+                    groups.append(
+                        ParamGroup(f"{key}.{i}", (key,), segment=s, layer=i)
+                    )
+        head_keys = ["final_norm"]
+        if not cfg.tie_embeddings:
+            head_keys.append("unembed")
+        groups.append(ParamGroup("head", tuple(head_keys)))
+        return tuple(groups)
+
+    def stream_stages(self, batch: dict) -> Tuple[StreamStage, ...]:
+        """The teacher-forced forward+loss as a walk over layer groups.
+
+        Mirrors ``loss``/``forward`` arithmetic op for op: each stage
+        reads only the groups it names, so a caller holding group
+        buckets (``repro.dist.fsdp`` streaming mode) materializes one
+        group's full-size view at a time. The carry threads
+        ``batch``/``x``/``positions``/``aux`` (and ``enc_out`` for
+        encoder-decoder configs) between stages. The only intentional
+        deviation from ``forward``: per-layer cross-attention K/V are
+        projected from the layer's own group (``forward`` vmaps the
+        whole segment's projections at once) — same einsum, per layer.
+        """
+        cfg = self.cfg
+        specs = self.param_group_specs()
+        index = {g.name: i for i, g in enumerate(specs)}
+        has_frames = batch.get("encoder_frames") is not None
+        prefix = batch.get("prefix_embeddings")
+        prefix_len = 0 if prefix is None else int(prefix.shape[1])
+
+        def acc_aux(aux, new):
+            return {k: aux[k] + new[k] for k in aux}
+
+        def embed_apply(carry, groups):
+            (top,) = groups
+            b = carry["batch"]
+            x, _ = self._embed(top, b["tokens"], b.get("prefix_embeddings"))
+            positions = self._positions(x.shape[0], 0, x.shape[1])
+            if cfg.pos_embed == "learned":
+                x = x + top["pos_embed"]["table"][positions].astype(x.dtype)
+            elif cfg.pos_embed == "sinusoidal":
+                table = sinusoidal_table(x.shape[1], cfg.d_model)
+                x = x + jnp.asarray(table, x.dtype)[positions]
+            aux = {"load_balance": jnp.float32(0.0),
+                   "router_z": jnp.float32(0.0)}
+            return {**carry, "x": x, "positions": positions, "aux": aux}
+
+        stages = [StreamStage("embed", (index["embed"],), embed_apply)]
+
+        if has_frames:
+            def encoder_apply(carry, groups):
+                (enc,) = groups
+                enc_out = self._encode(enc, carry["batch"]["encoder_frames"])
+                return {**carry, "enc_out": enc_out}
+
+            stages.append(
+                StreamStage("encoder", (index["encoder"],), encoder_apply)
+            )
+
+        for g in specs:
+            if g.segment is None:
+                continue
+            seg = self.segments[g.segment]
+            if g.layer is None:
+                def seg_apply(carry, groups, _g=g, _seg=seg):
+                    (sub,) = groups
+                    pseg = sub[_g.keys[0]]
+                    cross_kvs = (
+                        _segment_cross_kv(pseg, carry["enc_out"], cfg)
+                        if has_frames else None
+                    )
+                    x, _, aux = self._run_segment(
+                        pseg, carry["x"], _seg,
+                        positions=carry["positions"], caches=None,
+                        cache_spec=None, cross_kvs=cross_kvs, decode=False,
+                    )
+                    return {**carry, "x": x,
+                            "aux": acc_aux(carry["aux"], aux)}
+
+                stages.append(StreamStage(g.name, (index[g.name],), seg_apply))
+            else:
+                def layer_apply(carry, groups, _g=g, _seg=seg):
+                    (sub,) = groups
+                    p = sub[_g.keys[0]]          # one layer's tree
+                    ckv = (
+                        encoder_kv(p["cross"], carry["enc_out"], cfg)
+                        if has_frames and "cross" in p else None
+                    )
+                    x, _, aux = self._layer_apply(
+                        p, carry["x"], _seg,
+                        positions=carry["positions"], cache=None,
+                        cache_spec=None, cross_kv=ckv, decode=False,
+                    )
+                    return {**carry, "x": x,
+                            "aux": acc_aux(carry["aux"], aux)}
+
+                stages.append(
+                    StreamStage(g.name, (index[g.name],), layer_apply)
+                )
+
+        head_ids = (index["head"],)
+        if cfg.tie_embeddings:
+            head_ids = head_ids + (index["embed"],)
+
+        def head_apply(carry, groups):
+            view: Dict[str, Any] = {}
+            for sub in groups:
+                view.update(sub)
+            x = apply_norm(view["final_norm"], carry["x"], cfg.norm)
+            if prefix_len:
+                x = x[:, prefix_len:, :]
+            logits = self._unembed(view, x)
+            total, metrics = self._combine_loss(
+                logits, carry["batch"], carry["aux"]
+            )
+            return {**carry, "loss": total, "metrics": metrics}
+
+        stages.append(StreamStage("head", head_ids, head_apply))
+        return tuple(stages)
 
     # -- serving ------------------------------------------------------------------
     def cache_specs(self, max_len: int) -> List[CacheSpec]:

@@ -14,7 +14,7 @@ every sharding the framework uses (node axis, TP, FSDP).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -168,3 +168,63 @@ def test_mix_matchings_masked_rejects_wrong_bits_length():
         mix_matchings_masked(
             {"w": jnp.ones((3,))}, 0.5, _perms(), jnp.ones((3,)), info
         )
+
+
+# ---------------------------------------------------------------------------
+# Layer-grouped plans (streaming FSDP layout)
+# ---------------------------------------------------------------------------
+def test_unbounded_target_packs_one_bucket():
+    tree = {f"l{i}": jnp.zeros((100,)) for i in range(10)}
+    plan = bucketing.plan_buckets(tree, target_bytes=None)
+    assert plan.num_buckets == 1
+    assert plan.bucket_sizes == (1000,)
+    # padding still applies on top of the single bucket
+    plan2 = bucketing.plan_buckets(tree, target_bytes=None, pad_to=7)
+    assert plan2.bucket_sizes == (1001,)
+
+
+def test_plan_group_buckets_orders_and_sizes():
+    groups = [
+        ("embed", {"table": jnp.zeros((16, 8))}),
+        ("block_0", {"w": jnp.zeros((8, 8)), "b": jnp.zeros((8,))}),
+        ("head", {"scale": jnp.zeros((8,))}),
+    ]
+    gplan = bucketing.plan_group_buckets(groups)
+    assert gplan.names == ("embed", "block_0", "head")
+    assert gplan.bucket_sizes == (128, 72, 8)
+    assert gplan.num_buckets == 3
+    assert gplan.total_elements == 208
+    assert gplan.max_group_elements == 128
+    # pad_to rounds every group bucket shard-divisible
+    gplan2 = bucketing.plan_group_buckets(groups, pad_to=16)
+    assert gplan2.bucket_sizes == (128, 80, 16)
+
+
+def test_plan_group_buckets_round_trips_each_group():
+    groups = [
+        ("a", {"w": jax.random.normal(jax.random.key(0), (5, 3))}),
+        ("b", {"v": jax.random.normal(jax.random.key(1), (7,))}),
+    ]
+    gplan = bucketing.plan_group_buckets(groups, pad_to=2)
+    for (name, sub), plan in zip(groups, gplan.plans):
+        (bucket,) = bucketing.ravel(plan, sub)
+        back = bucketing.unravel(plan, (bucket,))
+        for got, want in zip(jax.tree.leaves(back), jax.tree.leaves(sub)):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_plan_group_buckets_rejects_bad_groups():
+    with pytest.raises(ValueError, match="no float leaves"):
+        bucketing.plan_group_buckets(
+            [("empty", {"step": jnp.asarray(0, jnp.int32)})]
+        )
+    ok = {"w": jnp.zeros((4,))}
+    with pytest.raises(ValueError, match="duplicate"):
+        bucketing.plan_group_buckets([("g", ok), ("g", ok)])
+    # GroupedPlan refuses a multi-bucket member plan outright
+    multi = bucketing.plan_buckets(
+        {f"l{i}": jnp.zeros((100,)) for i in range(4)}, target_bytes=500
+    )
+    assert multi.num_buckets > 1
+    with pytest.raises(ValueError, match="exactly one bucket"):
+        bucketing.GroupedPlan(names=("g",), plans=(multi,))

@@ -9,7 +9,6 @@ from repro.core import (
     empirical_rho,
     expected_laplacians,
     matching_decomposition,
-    mixing_matrix,
     named_graph,
     optimize_activation_probabilities,
     optimize_alpha,
@@ -18,7 +17,6 @@ from repro.core import (
     plan_periodic,
     plan_vanilla,
     project_capped_simplex,
-    ring_graph,
     schedule_mixing_matrix,
     spectral_norm_rho,
 )

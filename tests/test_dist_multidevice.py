@@ -10,7 +10,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -122,8 +121,9 @@ def test_decentralized_training_loss_decreases_and_consensus():
                         first = float(jnp.mean(losses))
             results[mode] = (first, float(jnp.mean(losses)),
                              float(dt.consensus_distance(params)))
-        f, l, c = results["masked"]
-        assert l < f - 0.3, f"loss did not decrease: {f} -> {l}"
+        first_l, last_l, c = results["masked"]
+        assert last_l < first_l - 0.3, (
+            f"loss did not decrease: {first_l} -> {last_l}")
         assert c < results["none"][2], "gossip must reduce consensus distance"
         print("OK", results)
     """)

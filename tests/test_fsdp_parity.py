@@ -237,7 +237,6 @@ def test_consensus_distance_sharded_matches_replicated():
     the replicated consensus on the gathered tree (single device — pure
     layout algebra, padding contributes zero)."""
     import jax
-    import jax.numpy as jnp
     import numpy as np
 
     from repro.dist import bucketing
