@@ -24,7 +24,12 @@ the largest full-size view the fwd/bwd materializes: the whole padded
 replica for the monolithic gather vs the largest layer group for
 ``--stream-layers`` (``plan_group_buckets`` over
 ``Model.param_group_specs``) — and the smoke job asserts the streamed
-peak is strictly below the monolithic one at every shard factor.
+peak is strictly below the monolithic one at every shard factor. A
+second table deepens the dbrx smoke config to a scanned 8-layer stack
+and adds ``peak_transient_bytes_scan_streamed`` (the scan-aware plan's
+per-layer-row peak) plus ``num_scan_iterations``; for every scanned
+row the scan-streamed peak must sit strictly below the stack-at-once
+streamed peak.
 """
 from __future__ import annotations
 
@@ -56,12 +61,23 @@ def step_time_model(plan, *, steps: int = 2000, seed: int = 0) -> dict:
 
 
 def fsdp_bytes_table(
-    arch: str = "internlm2_1_8b", shard_factors=(1, 2, 4)
+    arch: str = "internlm2_1_8b", shard_factors=(1, 2, 4), *,
+    num_layers: int = 0, label: str = "",
 ) -> list:
     """Per-device param bytes, per-matching gossip bytes and peak
     transient (fwd/bwd view) bytes at each shard factor, from the
     actual fsdp bucket layouts (``pad_to=S``) of the smoke model —
-    abstract shapes only, nothing is allocated."""
+    abstract shapes only, nothing is allocated.
+
+    Each row carries two streamed peaks: ``peak_transient_bytes_streamed``
+    (largest layer group, stack-at-once scan gathers) and
+    ``peak_transient_bytes_scan_streamed`` (scan-aware plan: a scanned
+    segment's peak is one *layer row*, not the stack).
+    ``num_layers``/``label`` deepen the smoke config so a scanned stack
+    (``repeats >= SCAN_THRESHOLD``) actually forms and report it under a
+    distinct arch label."""
+    import dataclasses
+
     import jax  # local: the analytic benches must not force a jax init
 
     from repro.configs.registry import get_smoke_config
@@ -69,9 +85,16 @@ def fsdp_bytes_table(
     from repro.dist.fsdp import param_group_subtrees
     from repro.models.transformer import Model
 
-    model = Model(get_smoke_config(arch))
+    cfg = get_smoke_config(arch)
+    if num_layers:
+        cfg = dataclasses.replace(cfg, num_layers=num_layers)
+    model = Model(cfg)
     abs_local = jax.eval_shape(lambda: model.init(jax.random.key(0)))
-    named_groups = param_group_subtrees(model)
+    groups = tuple(model.param_group_specs())
+    named_groups = param_group_subtrees(
+        model, abs_local=abs_local, groups=groups
+    )
+    scan_repeats = tuple(g.repeats for g in groups)
     raw_bytes = 4 * int(
         sum(np.prod(leaf.shape) for leaf in jax.tree.leaves(abs_local))
     )
@@ -79,14 +102,19 @@ def fsdp_bytes_table(
     for s in shard_factors:
         bplan = bucketing.plan_buckets(abs_local, pad_to=s)
         gplan = bucketing.plan_group_buckets(list(named_groups), pad_to=s)
+        splan = bucketing.plan_group_buckets(
+            list(named_groups), pad_to=s,
+            scan_aware=True, scan_repeats=scan_repeats,
+        )
         per_device = bplan.total_elements // s * 4
         # one matching's ppermute sends each node's local slice of every
         # bucket exactly once (equal to the per-device resident bytes in
         # this design, but accounted per bucket so the two can diverge
         # if the cost model ever does)
         per_matching = 4 * sum(sz // s for sz in bplan.bucket_sizes)
+        reps = int(splan.max_scan_repeats)
         rows.append(dict(
-            arch=arch,
+            arch=label or arch,
             shard=int(s),
             raw_param_bytes=raw_bytes,
             padded_param_bytes=bplan.total_elements * 4,
@@ -95,6 +123,9 @@ def fsdp_bytes_table(
             # the largest full-size view the fwd/bwd ever materializes
             peak_transient_bytes_monolithic=bplan.total_elements * 4,
             peak_transient_bytes_streamed=gplan.max_group_elements * 4,
+            # scan-aware plan: a scanned group's peak is one layer row
+            peak_transient_bytes_scan_streamed=splan.max_group_elements * 4,
+            num_scan_iterations=reps if reps > 1 else 0,
             num_layer_groups=gplan.num_buckets,
         ))
     return rows
@@ -175,30 +206,56 @@ def run(out_dir: str = RESULTS_DIR):
     checks.append((f"CB=0.02 delay reduction {ratio:.0f}x >= 40x", ratio >= 40))
 
     # fsdp composition: per-device bytes shrink by the shard factor
-    # (padding to shard-divisible bucket sizes costs < 1%)
-    fsdp_rows = fsdp_bytes_table()
-    by_shard = {r["shard"]: r for r in fsdp_rows}
-    for s in (2, 4):
-        for field, label in (
-            ("per_device_param_bytes", "per-device param bytes"),
-            ("per_matching_comm_bytes", "per-matching gossip bytes"),
-        ):
-            checks.append((
-                f"fsdp shard={s}: {label} {by_shard[s][field]} <= "
-                f"replica/{s} + 1% pad",
-                by_shard[s][field] * s <= by_shard[1][field] * 1.01,
-            ))
+    # (padding to shard-divisible bucket sizes costs < 1%). The second
+    # table deepens the dbrx smoke config to 8 layers so a scanned
+    # stack actually forms and the scan-aware plan has a row to cut.
+    fsdp_rows = fsdp_bytes_table() + fsdp_bytes_table(
+        arch="dbrx_132b", num_layers=8, label="dbrx_132b_deep8"
+    )
+    by_key = {(r["arch"], r["shard"]): r for r in fsdp_rows}
+    archs = sorted({r["arch"] for r in fsdp_rows})
+    for a in archs:
+        for s in (2, 4):
+            for field, label in (
+                ("per_device_param_bytes", "per-device param bytes"),
+                ("per_matching_comm_bytes", "per-matching gossip bytes"),
+            ):
+                checks.append((
+                    f"fsdp shard={s}: {a} {label} {by_key[a, s][field]} <= "
+                    f"replica/{s} + 1% pad",
+                    by_key[a, s][field] * s <= by_key[a, 1][field] * 1.01,
+                ))
     # streaming: the largest layer-group view must be strictly smaller
-    # than the monolithic gathered replica at every shard factor
-    for s, r in sorted(by_shard.items()):
+    # than the monolithic gathered replica at every shard factor, and
+    # on scanned configs the scan-aware per-layer-row peak must sit
+    # strictly below the stack-at-once streamed peak
+    for (a, s), r in sorted(by_key.items()):
         checks.append((
-            f"stream shard={s}: peak transient "
+            f"stream shard={s}: {a} peak transient "
             f"{r['peak_transient_bytes_streamed']} B "
             f"({r['num_layer_groups']} groups) < monolithic "
             f"{r['peak_transient_bytes_monolithic']} B",
             r["peak_transient_bytes_streamed"]
             < r["peak_transient_bytes_monolithic"],
         ))
+        if r["num_scan_iterations"]:
+            checks.append((
+                f"stream shard={s}: {a} scan-streamed peak "
+                f"{r['peak_transient_bytes_scan_streamed']} B "
+                f"({r['num_scan_iterations']} scan iterations) < streamed "
+                f"{r['peak_transient_bytes_streamed']} B",
+                r["peak_transient_bytes_scan_streamed"]
+                < r["peak_transient_bytes_streamed"],
+            ))
+        else:
+            # no scanned stack: the scan-aware plan must degrade to the
+            # stack-at-once layout exactly
+            checks.append((
+                f"stream shard={s}: {a} unscanned scan-streamed peak == "
+                f"streamed ({r['peak_transient_bytes_scan_streamed']} B)",
+                r["peak_transient_bytes_scan_streamed"]
+                == r["peak_transient_bytes_streamed"],
+            ))
     us = (time.time() - t0) * 1e6 / max(len(rows), 1)
 
     # machine-readable artifact for the CI benchmarks smoke job

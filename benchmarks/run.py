@@ -21,9 +21,10 @@ streamed peak-transient bytes sit below the monolithic gather.
 
 ``--compare BASELINE`` is the regression gate: the baseline JSON (the
 committed ``benchmarks/results/BENCH_comm_time.json``) is read *before*
-the benches overwrite the artifact, and after the run every per-shard
-byte metric (per-device resident, per-matching gossip, streamed peak
-transient) must sit within +5% of the baseline or the run fails.
+the benches overwrite the artifact, and after the run every per-(arch, shard)
+byte metric (per-device resident, per-matching gossip, streamed and
+scan-streamed peak transient) must sit within +5% of the baseline or
+the run fails.
 
 On exit the aggregator always prints the artifact path and a one-line
 verdict summary, so a red CI job is diagnosable from the log alone.
@@ -46,6 +47,7 @@ REGRESSION_FIELDS = (
     "per_device_param_bytes",
     "per_matching_comm_bytes",
     "peak_transient_bytes_streamed",
+    "peak_transient_bytes_scan_streamed",
 )
 REGRESSION_TOLERANCE = 1.05
 
@@ -57,7 +59,7 @@ def _assert_artifact_verdicts(path: str) -> bool:
     written to disk). Returns True on pass."""
     with open(path) as f:
         artifact = json.load(f)
-    by_shard = {r["shard"]: r for r in artifact["fsdp"]}
+    by_key = {(r["arch"], r["shard"]): r for r in artifact["fsdp"]}
     gated = [
         c for c in artifact["checks"]
         if c["name"].startswith(("fsdp shard=", "stream shard="))
@@ -68,16 +70,18 @@ def _assert_artifact_verdicts(path: str) -> bool:
         print(f"  [{'PASS' if c['ok'] else 'FAIL'}] artifact: {c['name']}",
               file=sys.stderr)
     print(
-        "  per-device param bytes by shard: "
-        + str({s: r["per_device_param_bytes"]
-               for s, r in sorted(by_shard.items())}),
+        "  per-device param bytes by (arch, shard): "
+        + str({k: r["per_device_param_bytes"]
+               for k, r in sorted(by_key.items())}),
         file=sys.stderr,
     )
     print(
-        "  peak transient bytes by shard (streamed vs monolithic): "
-        + str({s: (r["peak_transient_bytes_streamed"],
+        "  peak transient bytes by (arch, shard) "
+        "(scan-streamed vs streamed vs monolithic): "
+        + str({k: (r.get("peak_transient_bytes_scan_streamed"),
+                   r["peak_transient_bytes_streamed"],
                    r["peak_transient_bytes_monolithic"])
-               for s, r in sorted(by_shard.items())}),
+               for k, r in sorted(by_key.items())}),
         file=sys.stderr,
     )
     return ok

@@ -67,7 +67,10 @@ class ModelConfig:
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
 
-    # layer stacking
+    # layer stacking. scan_layers=True is safe for every runtime:
+    # streamed FSDP gathers one layer row per scan iteration
+    # (--stream-scan, on by default), so flipping this off is a
+    # compile-strategy choice only, not a memory escape hatch.
     scan_layers: bool = True         # homogeneous stacks via lax.scan
     remat: bool = True
 
@@ -208,6 +211,11 @@ class TrainConfig:
     warmup_steps: int = 0
     seed: int = 0
     grad_clip: float = 0.0
+    # execution strategy of the sharded-replica (FSDP) runtime: stream
+    # per layer group, and per scan iteration inside scanned stacks
+    # (launch/train.py --stream-layers / --stream-scan)
+    stream_layers: bool = True
+    stream_scan: bool = True
 
 
 def long_context_variant(cfg: "ModelConfig"):

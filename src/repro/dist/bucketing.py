@@ -30,6 +30,29 @@ than one group's full-size view. ``plan_group_buckets`` builds that
 layout: a ``GroupedPlan`` is an ordered tuple of named single-bucket
 ``BucketPlan``s (``plan_buckets`` with ``target_bytes=None`` packs a
 whole subtree into exactly one bucket).
+
+Scan-aware grouped plans (``plan_group_buckets(scan_aware=True)``)
+additionally treat a scanned/periodic segment's stacked subtree as
+``repeats`` identical per-layer rows: the group's plan describes ONE
+layer (leading ``repeats`` dim stripped from every leaf) and the
+group's bucket is the ``repeats * per_layer`` concatenation of rows in
+**shard-major** element order — the flat bucket is the logical
+``(num_shards, repeats, per_layer // num_shards)`` array raveled, so
+
+* the resident contiguous shard slice s is exactly the ``(repeats,
+  per_layer // num_shards)`` stack of that shard's row pieces, and
+* ``all_gather(row[i], 'shard', tiled=True)`` of one resident row
+  reconstructs layer i's full ``(per_layer,)`` bucket in plan order,
+
+which is what lets a ``lax.scan`` train-step body gather one layer per
+iteration instead of the whole stack. Element order within the flat
+bucket is a fixed permutation of the non-scan layout; gossip, the
+optimizer, and consensus distance are elementwise over buckets, so
+they are agnostic to it, and checkpoint interop goes through the
+layout's ravel/unravel which apply the permutation consistently.
+``rows_to_shard_major``/``rows_from_shard_major`` are the pure-reshape
+permutation; ``scan_ravel*``/``scan_unravel*`` compose them with the
+per-layer plan.
 """
 from __future__ import annotations
 
@@ -329,26 +352,47 @@ class GroupedPlan:
 
     names: Tuple[str, ...]
     plans: Tuple[BucketPlan, ...]        # one single-bucket plan per group
+    # Scan repeats per group: r > 1 marks a scan-aware group whose plan
+    # describes ONE layer row and whose bucket is r shard-major rows.
+    # Defaults to all-ones (plan covers the whole subtree directly).
+    repeats: Tuple[int, ...] = ()
 
     def __post_init__(self):
         if len(self.names) != len(self.plans):
             raise ValueError(
                 f"{len(self.names)} group names but {len(self.plans)} plans"
             )
-        for name, plan in zip(self.names, self.plans):
+        if not self.repeats:
+            object.__setattr__(self, "repeats", (1,) * len(self.plans))
+        if len(self.repeats) != len(self.plans):
+            raise ValueError(
+                f"{len(self.repeats)} repeat entries but {len(self.plans)} "
+                "plans"
+            )
+        for name, plan, r in zip(self.names, self.plans, self.repeats):
             if plan.num_buckets != 1:
                 raise ValueError(
                     f"group {name!r} planned {plan.num_buckets} buckets; "
                     "grouped plans require exactly one bucket per group"
                 )
+            if r < 1:
+                raise ValueError(f"group {name!r} has repeats={r} < 1")
 
     @property
     def num_buckets(self) -> int:
         return len(self.plans)
 
     @property
-    def bucket_sizes(self) -> Tuple[int, ...]:
+    def per_layer_sizes(self) -> Tuple[int, ...]:
+        """Elements gathered per streamed iteration of each group: one
+        scan row for a scan-aware group, the whole bucket otherwise."""
         return tuple(p.bucket_sizes[0] for p in self.plans)
+
+    @property
+    def bucket_sizes(self) -> Tuple[int, ...]:
+        return tuple(
+            p.bucket_sizes[0] * r for p, r in zip(self.plans, self.repeats)
+        )
 
     @property
     def total_elements(self) -> int:
@@ -356,11 +400,36 @@ class GroupedPlan:
 
     @property
     def max_group_elements(self) -> int:
-        return max(self.bucket_sizes) if self.plans else 0
+        """Largest full-size view a streamed step materializes at once:
+        the widest per-iteration slice (a scanned group contributes one
+        layer row, not its whole stack)."""
+        return max(self.per_layer_sizes) if self.plans else 0
+
+    @property
+    def max_scan_repeats(self) -> int:
+        return max(self.repeats) if self.plans else 0
+
+
+def _strip_leading(tree: PyTree, repeats: int, name: str) -> PyTree:
+    """Abstract subtree with the leading scan dim removed from every
+    leaf (validated to equal ``repeats``)."""
+    def strip(leaf):
+        shape = tuple(int(d) for d in leaf.shape)
+        if not shape or shape[0] != repeats:
+            raise ValueError(
+                f"scan group {name!r}: leaf shape {shape} does not carry "
+                f"the leading repeats={repeats} scan dim"
+            )
+        return jax.ShapeDtypeStruct(shape[1:], leaf.dtype)
+    return jax.tree.map(strip, tree)
 
 
 def plan_group_buckets(
-    named_trees: Sequence[Tuple[str, PyTree]], *, pad_to: int = 1
+    named_trees: Sequence[Tuple[str, PyTree]],
+    *,
+    pad_to: int = 1,
+    scan_aware: bool = False,
+    scan_repeats: Optional[Sequence[Optional[int]]] = None,
 ) -> GroupedPlan:
     """One bucket per named subtree, in the given (execution) order.
 
@@ -369,9 +438,27 @@ def plan_group_buckets(
     train step issues exactly one all-gather per group. A group whose
     subtree has no float leaf would have nothing to gather and is
     rejected (every parameter must belong to exactly one group).
+
+    ``scan_aware=True`` with ``scan_repeats[i] = r > 1`` plans group i
+    per layer: every leaf must carry a leading ``r`` scan dim, which is
+    stripped before planning, so the group's plan describes one
+    ``(per_layer,)`` row (padded to ``pad_to``) and the group's bucket
+    holds ``r`` rows in shard-major order (``r * per_layer`` elements
+    total). ``scan_repeats`` entries of ``None``/``1`` (or
+    ``scan_aware=False``) keep the whole-subtree layout.
     """
-    names, plans = [], []
-    for name, sub in named_trees:
+    if scan_repeats is not None and len(scan_repeats) != len(named_trees):
+        raise ValueError(
+            f"{len(scan_repeats)} scan_repeats entries for "
+            f"{len(named_trees)} groups"
+        )
+    names, plans, repeats = [], [], []
+    for gi, (name, sub) in enumerate(named_trees):
+        r = 1
+        if scan_aware and scan_repeats is not None:
+            r = int(scan_repeats[gi] or 1)
+        if r > 1:
+            sub = _strip_leading(sub, r, str(name))
         plan = plan_buckets(sub, target_bytes=None, pad_to=pad_to)
         if plan.num_buckets != 1:
             raise ValueError(
@@ -379,6 +466,99 @@ def plan_group_buckets(
             )
         names.append(str(name))
         plans.append(plan)
+        repeats.append(r)
     if len(set(names)) != len(names):
         raise ValueError(f"duplicate layer-group names in {names}")
-    return GroupedPlan(names=tuple(names), plans=tuple(plans))
+    return GroupedPlan(
+        names=tuple(names), plans=tuple(plans), repeats=tuple(repeats)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shard-major scan-row layout (scan-aware streaming FSDP)
+# ---------------------------------------------------------------------------
+def rows_to_shard_major(
+    rows: jax.Array, num_shards: int
+) -> jax.Array:
+    """``(..., repeats, per_layer) -> (..., repeats * per_layer)`` flat
+    bucket in shard-major order: contiguous shard slice s of the result
+    is the ``(repeats, per_layer // num_shards)`` stack of every row's
+    s-th piece. Pure reshape/transpose, no host sync."""
+    *lead, r, per = rows.shape
+    if per % num_shards:
+        raise ValueError(
+            f"per-layer row of {per} elements does not divide into "
+            f"{num_shards} shards — plan with pad_to={num_shards}"
+        )
+    x = rows.reshape(tuple(lead) + (r, num_shards, per // num_shards))
+    x = jnp.moveaxis(x, -2, -3)          # (..., S, r, per // S)
+    return x.reshape(tuple(lead) + (r * per,))
+
+
+def rows_from_shard_major(
+    flat: jax.Array, repeats: int, num_shards: int
+) -> jax.Array:
+    """Inverse of ``rows_to_shard_major``:
+    ``(..., repeats * per_layer) -> (..., repeats, per_layer)``."""
+    *lead, size = flat.shape
+    if size % (repeats * num_shards):
+        raise ValueError(
+            f"bucket of {size} elements does not factor into "
+            f"{repeats} shard-divisible rows"
+        )
+    per = size // repeats
+    x = flat.reshape(tuple(lead) + (num_shards, repeats, per // num_shards))
+    x = jnp.moveaxis(x, -3, -2)          # (..., r, S, per // S)
+    return x.reshape(tuple(lead) + (repeats, per))
+
+
+def scan_ravel(
+    plan: BucketPlan, tree: PyTree, repeats: int, num_shards: int
+) -> jax.Array:
+    """Pack a scan-stacked subtree (every leaf ``(repeats, ...)``) into
+    one flat shard-major fp32 bucket of ``repeats * per_layer``
+    elements. ``plan`` is the per-layer plan (leading dim stripped)."""
+    rows = ravel_stacked(plan, tree)[0]          # (repeats, per_layer)
+    return rows_to_shard_major(rows, num_shards)
+
+
+def scan_unravel(
+    plan: BucketPlan, bucket: jax.Array, repeats: int, num_shards: int
+) -> PyTree:
+    """Inverse of ``scan_ravel``: flat shard-major bucket back to the
+    scan-stacked subtree (float leaves fp32, leading ``repeats`` dim)."""
+    rows = rows_from_shard_major(bucket, repeats, num_shards)
+    return unravel_stacked(plan, (rows,))
+
+
+def scan_ravel_stacked(
+    plan: BucketPlan, tree: PyTree, repeats: int, num_shards: int
+) -> jax.Array:
+    """Node-stacked ``scan_ravel``: leaves ``(nodes, repeats, ...)`` to
+    a ``(nodes, repeats * per_layer)`` shard-major bucket."""
+    nodes = None
+    for leaf in jax.tree.leaves(tree):
+        nodes = int(leaf.shape[0])
+        break
+    if nodes is None:
+        raise ValueError("scan group subtree has no leaves")
+    merged = jax.tree.map(
+        lambda a: jnp.reshape(a, (-1,) + tuple(a.shape[2:])), tree
+    )
+    rows = ravel_stacked(plan, merged)[0]        # (nodes * repeats, per)
+    rows = rows.reshape(nodes, repeats, -1)
+    return rows_to_shard_major(rows, num_shards)
+
+
+def scan_unravel_stacked(
+    plan: BucketPlan, bucket: jax.Array, repeats: int, num_shards: int
+) -> PyTree:
+    """Inverse of ``scan_ravel_stacked``: ``(nodes, size)`` shard-major
+    bucket back to a ``(nodes, repeats, ...)``-leaved subtree (fp32)."""
+    nodes = int(bucket.shape[0])
+    rows = rows_from_shard_major(bucket, repeats, num_shards)
+    merged = unravel_stacked(plan, (rows.reshape(nodes * repeats, -1),))
+    return jax.tree.map(
+        lambda a: jnp.reshape(a, (nodes, repeats) + tuple(a.shape[1:])),
+        merged,
+    )

@@ -56,6 +56,25 @@ previous block's compute. Resident state (shards, optimizer, gossip)
 is identical in both layouts: a flat tuple of contiguous fp32 bucket
 shards, so gossip, checkpoints and the overlap ``GossipState`` are
 layout-agnostic.
+
+Scan-aware streaming (``make_stream_layout(scan_aware=True)``, the
+default) extends the walk *inside* ``lax.scan`` segments. A scanned /
+periodic segment used to collapse into one near-model-sized group (its
+scan consumes the whole stacked subtree); its bucket is now laid out as
+``repeats`` shard-major per-layer rows (``bucketing.scan_ravel``), and
+the step runs the segment through ``_scan_stream_segment``: a
+``jax.custom_vjp``-wrapped ``lax.scan`` whose carry threads the *next*
+layer's in-flight gathered row, so iteration i computes on layer i's
+params while layer i+1's all-gather is already issued — explicit
+double-buffered prefetch, not scheduler-dependent. The backward pass
+re-gathers each layer's row per iteration (reverse scan over a
+recomputed forward) and reduce-scatters each row's grad through the
+all-gather transpose, so at most two layer rows are ever live and peak
+transient memory is O(layer) even for deep scanned stacks. The resident
+bucket-shard tuple contract is unchanged — gossip, the optimizer,
+``GossipState`` and checkpoints see the same flat fp32 shards (the
+shard-major row order is a fixed in-bucket permutation applied
+consistently by the layout's ravel/unravel).
 """
 from __future__ import annotations
 
@@ -180,6 +199,15 @@ class FsdpStreamLayout:
     abs_groups: Tuple[PyTree, ...]
     num_nodes: int
     num_shards: int
+    # Per-layer abstract subtree per scan-aware group (leading scan dim
+    # stripped); None for whole-subtree groups. Defaults to all-None.
+    abs_rows: Tuple[Any, ...] = ()
+
+    def __post_init__(self):
+        if not self.abs_rows:
+            object.__setattr__(
+                self, "abs_rows", (None,) * len(self.groups)
+            )
 
     @property
     def shard_sizes(self) -> Tuple[int, ...]:
@@ -195,32 +223,51 @@ class FsdpStreamLayout:
 
     # -- bucket tuple <-> param tree (local / node-stacked) ------------------
     def ravel(self, tree: PyTree) -> Tuple[jax.Array, ...]:
-        return tuple(
-            bucketing.ravel(p, _group_subtree(tree, g))[0]
-            for g, p in zip(self.groups, self.plan.plans)
-        )
+        out = []
+        for g, p, r in zip(self.groups, self.plan.plans, self.plan.repeats):
+            sub = _group_subtree(tree, g)
+            if r > 1:
+                out.append(bucketing.scan_ravel(p, sub, r, self.num_shards))
+            else:
+                out.append(bucketing.ravel(p, sub)[0])
+        return tuple(out)
 
     def unravel_cast(self, buckets: Tuple[jax.Array, ...]) -> PyTree:
-        subs = tuple(
-            _cast_like(bucketing.unravel(p, (b,)), a)
-            for p, b, a in zip(self.plan.plans, buckets, self.abs_groups)
-        )
-        return _join_group_subtrees(self.groups, subs)
+        subs = []
+        for p, b, a, r in zip(
+            self.plan.plans, buckets, self.abs_groups, self.plan.repeats
+        ):
+            if r > 1:
+                sub = bucketing.scan_unravel(p, b, r, self.num_shards)
+            else:
+                sub = bucketing.unravel(p, (b,))
+            subs.append(_cast_like(sub, a))
+        return _join_group_subtrees(self.groups, tuple(subs))
 
     def ravel_stacked(self, tree: PyTree) -> Tuple[jax.Array, ...]:
-        return tuple(
-            bucketing.ravel_stacked(p, _group_subtree(tree, g, stacked=True))[0]
-            for g, p in zip(self.groups, self.plan.plans)
-        )
+        out = []
+        for g, p, r in zip(self.groups, self.plan.plans, self.plan.repeats):
+            sub = _group_subtree(tree, g, stacked=True)
+            if r > 1:
+                out.append(
+                    bucketing.scan_ravel_stacked(p, sub, r, self.num_shards)
+                )
+            else:
+                out.append(bucketing.ravel_stacked(p, sub)[0])
+        return tuple(out)
 
     def unravel_stacked(self, buckets: Tuple[jax.Array, ...]) -> PyTree:
         """fp32 node-stacked tree (optimizer-slot layout — no storage
         cast)."""
-        subs = tuple(
-            bucketing.unravel_stacked(p, (b,))
-            for p, b in zip(self.plan.plans, buckets)
-        )
-        return _join_group_subtrees(self.groups, subs, stacked=True)
+        subs = []
+        for p, b, r in zip(self.plan.plans, buckets, self.plan.repeats):
+            if r > 1:
+                subs.append(
+                    bucketing.scan_unravel_stacked(p, b, r, self.num_shards)
+                )
+            else:
+                subs.append(bucketing.unravel_stacked(p, (b,)))
+        return _join_group_subtrees(self.groups, tuple(subs), stacked=True)
 
     def unravel_stacked_cast(self, buckets: Tuple[jax.Array, ...]) -> PyTree:
         return _cast_like(self.unravel_stacked(buckets), self.abs_local)
@@ -281,15 +328,31 @@ def param_group_subtrees(
     )
 
 
-def make_stream_layout(model, spec: DistSpec) -> FsdpStreamLayout:
+def make_stream_layout(
+    model, spec: DistSpec, *, scan_aware: bool = True
+) -> FsdpStreamLayout:
     """Layer-grouped bucket layout: one shard-divisible bucket per
-    entry of ``model.param_group_specs()`` (execution order)."""
+    entry of ``model.param_group_specs()`` (execution order).
+
+    ``scan_aware=True`` (default) lays a scanned/periodic segment's
+    bucket out as ``repeats`` shard-major per-layer rows so the train
+    step gathers one scan iteration's params at a time; ``False`` keeps
+    the stack-at-once layout (one monolithic gather per scanned
+    segment — the pre-scan-streaming behavior, for A/B comparison)."""
     abs_local = _abs_params(model)
     groups = tuple(model.param_group_specs())
     named = param_group_subtrees(model, abs_local=abs_local, groups=groups)
     abs_groups = tuple(a for _, a in named)
+    scan_repeats = tuple(g.repeats for g in groups)
     gplan = bucketing.plan_group_buckets(
-        list(named), pad_to=spec.num_shards,
+        list(named),
+        pad_to=spec.num_shards,
+        scan_aware=scan_aware,
+        scan_repeats=scan_repeats,
+    )
+    abs_rows = tuple(
+        bucketing._strip_leading(sub, r, name) if r > 1 else None
+        for (name, sub), r in zip(named, gplan.repeats)
     )
     return FsdpStreamLayout(
         plan=gplan,
@@ -298,6 +361,7 @@ def make_stream_layout(model, spec: DistSpec) -> FsdpStreamLayout:
         abs_groups=abs_groups,
         num_nodes=spec.num_nodes,
         num_shards=spec.num_shards,
+        abs_rows=abs_rows,
     )
 
 
@@ -470,10 +534,114 @@ def _materialize_group(
 ) -> PyTree:
     """all-gather ONE layer group's bucket shard and unravel it to the
     group's param subtree in storage dtype. The only full-size view the
-    streamed step ever holds is one group's."""
+    streamed step ever holds is one group's. A scan-aware group's
+    bucket is shard-major rows — this is its stack-at-once fallback
+    (used by stages that cannot scan-stream, e.g. cross-attention)."""
     full = jax.lax.all_gather(shard, "shard", tiled=True)
-    sub = bucketing.unravel(layout.plan.plans[gi], (full,))
+    r = layout.plan.repeats[gi]
+    if r > 1:
+        sub = bucketing.scan_unravel(
+            layout.plan.plans[gi], full, r, layout.num_shards
+        )
+    else:
+        sub = bucketing.unravel(layout.plan.plans[gi], (full,))
     return _cast_like(sub, layout.abs_groups[gi])
+
+
+def _scan_stream_segment(layout: FsdpStreamLayout, gi: int, body):
+    """Per-iteration streamed execution of one scanned segment.
+
+    Returns ``f(x, rows) -> (x, aux)`` where ``rows`` is the group's
+    resident shard slice viewed as ``(repeats, per_layer // S)`` rows.
+    Forward is a ``lax.scan`` whose carry threads the NEXT layer's
+    gathered row: iteration i computes on layer i's params while layer
+    i+1's all-gather is already issued (explicit double-buffered
+    prefetch — exactly two ``(per_layer,)`` rows live, independent of
+    the scheduler).
+
+    ``jax.custom_vjp`` keeps autodiff from defeating the streaming: a
+    plain ``lax.scan`` over a carried gathered row would stack the rows
+    into an ``(repeats, per_layer)`` residual — the whole segment,
+    precisely what streaming exists to avoid. Instead the backward rule
+    recomputes the forward storing only each iteration's residual-stream
+    input, then runs a reverse scan that re-gathers layer i's row,
+    differentiates that one layer (``jax.vjp``), and reduce-scatters the
+    row's grad through the all-gather transpose (``psum_scatter`` over
+    the shard axis) — the same sum-over-sub-batches arithmetic the
+    non-scan streamed stages produce, so the caller's uniform ``/S``
+    turns it into the mean. The row grads come back ``(repeats,
+    per_layer // S)``, matching the resident layout.
+    """
+    per_plan = layout.plan.plans[gi]
+    abs_row = layout.abs_rows[gi]
+    reps = layout.plan.repeats[gi]
+
+    def gather_row(rows, i):
+        sl = jax.lax.dynamic_index_in_dim(rows, i, axis=0, keepdims=False)
+        return jax.lax.all_gather(sl, "shard", tiled=True)
+
+    def one_layer(x, raw):
+        view = _cast_like(bucketing.unravel(per_plan, (raw,)), abs_row)
+        return body.apply_layer(x, view)
+
+    def run_fwd(x, rows):
+        buf0 = gather_row(rows, 0)
+
+        def step(carry, i):
+            x, buf = carry
+            # issue layer i+1's gather BEFORE touching layer i's params
+            nxt = gather_row(rows, jnp.minimum(i + 1, reps - 1))
+            x, aux = one_layer(x, buf)
+            return (x, nxt), aux
+
+        (x, _), auxs = jax.lax.scan(step, (x, buf0), jnp.arange(reps))
+        return x, jax.tree.map(lambda a: a.sum(), auxs)
+
+    @jax.custom_vjp
+    def f(x, rows):
+        return run_fwd(x, rows)
+
+    def f_fwd(x, rows):
+        return run_fwd(x, rows), (x, rows)
+
+    def f_bwd(res, cts):
+        x0, rows = res
+        dx, daux = cts
+
+        def fstep(x, i):
+            x_new, _ = one_layer(x, gather_row(rows, i))
+            return x_new, x               # stash layer i's INPUT stream
+
+        _, x_ins = jax.lax.scan(fstep, x0, jnp.arange(reps))
+
+        def rstep(dx, idx_x):
+            i, x_in = idx_x
+            raw = gather_row(rows, i)
+
+            def g(x, raw):
+                view = _cast_like(
+                    bucketing.unravel(per_plan, (raw,)), abs_row
+                )
+                return body.apply_layer(x, view)
+
+            _, vjp = jax.vjp(g, x_in, raw)
+            dx_new, draw = vjp((dx, daux))
+            drow = jax.lax.psum_scatter(
+                draw, "shard", scatter_dimension=0, tiled=True
+            )
+            return dx_new, drow
+
+        dx0, drows = jax.lax.scan(
+            rstep, dx, (jnp.arange(reps), x_ins), reverse=True
+        )
+        return dx0, drows
+
+    f.defvjp(f_fwd, f_bwd)
+    return f
+
+
+def _acc_aux(aux, new):
+    return {k: aux[k] + new[k] for k in aux}
 
 
 def _stream_loss(
@@ -491,10 +659,33 @@ def _stream_loss(
     The gathers of later stages depend only on the resident shards, so
     the latency-hiding scheduler can overlap group g+1's gather with
     group g's compute.
+
+    A stage carrying a :class:`~repro.models.transformer.ScanStreamBody`
+    over a scan-aware group runs through ``_scan_stream_segment``
+    instead: per-iteration row gather with double-buffered prefetch,
+    per-iteration backward re-gather — its ``custom_vjp`` already owns
+    the rematerialization, so no outer ``jax.checkpoint``.
     """
     stages = model.stream_stages(batch)
     carry = {"batch": batch}
     for st in stages:
+        if st.scan is not None and len(st.group_ids) == 1:
+            gi = st.group_ids[0]
+            reps = layout.plan.repeats[gi]
+            if reps > 1:
+                if reps != st.scan.repeats:
+                    raise ValueError(
+                        f"group {layout.plan.names[gi]!r}: layout planned "
+                        f"{reps} scan rows but the model's scan body has "
+                        f"{st.scan.repeats} iterations"
+                    )
+                rows = shards[gi].reshape(reps, -1)
+                seg_fn = _scan_stream_segment(layout, gi, st.scan)
+                x, aux = seg_fn(carry["x"], rows)
+                carry = {**carry, "x": x,
+                         "aux": _acc_aux(carry["aux"], aux)}
+                continue
+
         def run(carry, *gshards, _st=st):
             trees = tuple(
                 _materialize_group(layout, gi, sh)

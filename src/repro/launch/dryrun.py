@@ -358,6 +358,14 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, gossip: str,
     from repro.models import ffn as ffn_mod
 
     scan_layers = mode == "proof"
+    # module-global tuning knobs: set for this run, restored afterwards
+    # so a counts run cannot poison a later proof run (or tests) in the
+    # same process
+    prior = (
+        attn_mod.CHUNK_LOOP_MODE,
+        ffn_mod.GROUPED_DOT_COUNTS_SURROGATE,
+        attn_mod.CHUNKED_SDPA_THRESHOLD,
+    )
     attn_mod.CHUNK_LOOP_MODE = "scan" if scan_layers else "unroll"
     ffn_mod.GROUPED_DOT_COUNTS_SURROGATE = mode == "counts"
     if mode == "counts":
@@ -367,27 +375,36 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, gossip: str,
         attn_mod.CHUNKED_SDPA_THRESHOLD = 1 << 30
     else:
         attn_mod.CHUNKED_SDPA_THRESHOLD = 8192
-    cfg = dataclasses.replace(get_config(arch), scan_layers=scan_layers)
-    if cfg_override is not None:
-        cfg = dataclasses.replace(cfg_override, scan_layers=scan_layers)
-    shape = INPUT_SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    n_chips = 512 if multi_pod else 256
-    t0 = time.time()
-    with jax.set_mesh(mesh):
-        if shape.kind == "train":
-            lowered, extras = build_train(cfg, shape, mesh, multi_pod, gossip,
-                                          sequence_parallel=seq_par)
-        else:
-            lowered, extras = build_serve(cfg, shape, mesh, multi_pod,
-                                          kv_seq_shard)
-        t_lower = time.time() - t0
-        compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
-        print(compiled.memory_analysis())
-        print({k: v for k, v in compiled.cost_analysis().items()
-               if k in ("flops", "bytes accessed")})
-        rec = analyze(lowered, compiled, cfg, shape, n_chips, extras)
+    try:
+        cfg = dataclasses.replace(get_config(arch), scan_layers=scan_layers)
+        if cfg_override is not None:
+            cfg = dataclasses.replace(cfg_override, scan_layers=scan_layers)
+        shape = INPUT_SHAPES[shape_name]
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = 512 if multi_pod else 256
+        t0 = time.time()
+        with jax.set_mesh(mesh):
+            if shape.kind == "train":
+                lowered, extras = build_train(
+                    cfg, shape, mesh, multi_pod, gossip,
+                    sequence_parallel=seq_par,
+                )
+            else:
+                lowered, extras = build_serve(cfg, shape, mesh, multi_pod,
+                                              kv_seq_shard)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            print(compiled.memory_analysis())
+            print({k: v for k, v in compiled.cost_analysis().items()
+                   if k in ("flops", "bytes accessed")})
+            rec = analyze(lowered, compiled, cfg, shape, n_chips, extras)
+    finally:
+        (
+            attn_mod.CHUNK_LOOP_MODE,
+            ffn_mod.GROUPED_DOT_COUNTS_SURROGATE,
+            attn_mod.CHUNKED_SDPA_THRESHOLD,
+        ) = prior
     rec["mesh"] = "2x16x16" if multi_pod else "16x16"
     rec["seconds_lower"] = round(t_lower, 1)
     rec["seconds_compile"] = round(t_compile, 1)

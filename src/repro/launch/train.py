@@ -27,6 +27,14 @@ O(model). ``--no-stream-layers`` restores the monolithic gather. The
 on-disk checkpoint format is identical either way (gather-on-save), so
 runs restore across layouts freely.
 
+``--stream-scan`` (default ON) extends the streaming INSIDE ``lax.scan``
+segments: a scanned/periodic stack gathers one layer row per scan
+iteration with double-buffered prefetch instead of one stack-sized
+group, so deep scanned configs keep O(layer) peak transient memory with
+scan compile times — unrolling via ``scan_layers=False`` is no longer
+the answer. ``--no-stream-scan`` restores the stack-at-once gather for
+A/B comparison.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch internlm2_1_8b \
       --preset tiny --graph paper8 --nodes 8 --budget 0.5 --steps 100
@@ -71,6 +79,15 @@ def main():
                          "(all-gather one block at a time; peak transient "
                          "memory O(largest group) instead of O(model)). "
                          "Default: on when --shard > 1")
+    ap.add_argument("--stream-scan", dest="stream_scan",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="stream INSIDE lax.scan segments: gather one "
+                         "layer row per scan iteration with double-"
+                         "buffered prefetch, so deep scanned stacks keep "
+                         "O(layer) peak transient memory. "
+                         "--no-stream-scan restores the stack-at-once "
+                         "gather (one near-model-sized group per scanned "
+                         "segment). Requires --stream-layers")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--resume", default="")
@@ -157,7 +174,8 @@ def main():
     layout = None
     if use_fsdp:
         layout = (
-            fsdp.make_stream_layout(model, spec) if args.stream_layers
+            fsdp.make_stream_layout(model, spec, scan_aware=args.stream_scan)
+            if args.stream_layers
             else fsdp.make_layout(model, spec)
         )
         params = fsdp.init_fsdp_params(model, layout, seed=args.seed)
@@ -166,21 +184,33 @@ def main():
               f"{layout.per_device_elements * 4 / 1e6:.2f} MB params/device "
               f"(of {layout.plan.total_elements * 4 / 1e6:.2f} MB/replica)")
         if args.stream_layers:
+            # the TRUE per-iteration peak: a scan-aware group streams
+            # one layer row per scan iteration, so its contribution is
+            # per_layer_elements (not repeats * per_layer_elements)
             peak = layout.plan.max_group_elements
             total = layout.plan.total_elements
+            scanned = [
+                (n, r) for n, r in
+                zip(layout.plan.names, layout.plan.repeats) if r > 1
+            ]
             print(f"fsdp: streaming {layout.plan.num_buckets} layer groups "
-                  f"({', '.join(layout.group_names)}); peak gathered view "
-                  f"{peak * 4 / 1e6:.2f} MB vs "
+                  f"({', '.join(layout.group_names)}); per-iteration peak "
+                  f"gathered view {peak * 4 / 1e6:.2f} MB vs "
                   f"{total * 4 / 1e6:.2f} MB monolithic")
-            if peak > 0.5 * total:
-                # a lax.scan segment streams as ONE group (the scan
-                # consumes its whole stacked subtree), so deep uniform
-                # stacks keep an O(model)-sized group unless unrolled
+            if scanned:
+                print("fsdp: scan-streaming "
+                      + ", ".join(f"{n} ({r} iterations/row gathers)"
+                                  for n, r in scanned)
+                      + " — double-buffered prefetch, <= 2 layer rows live")
+            if not args.stream_scan and peak > 0.5 * total:
+                # only reachable when scan streaming is explicitly
+                # disabled: a stack-at-once scanned group keeps an
+                # O(model)-sized gather
                 print("fsdp: WARNING largest layer group is "
-                      f"{100 * peak / total:.0f}% of the model — layer "
-                      "scanning collapsed the blocks into one group; "
-                      "set scan_layers=False on the config to restore "
-                      "per-layer streaming (at unrolled compile cost)")
+                      f"{100 * peak / total:.0f}% of the model — "
+                      "--no-stream-scan keeps each scanned segment as "
+                      "one stack-at-once gather; drop the flag to "
+                      "stream per scan iteration")
     else:
         params = dt.init_stacked_params(model, spec, seed=args.seed)
         opt_state = dt.init_stacked_opt_state(opt, model, spec)
@@ -308,7 +338,8 @@ def main():
                     args.ckpt_dir, eval_params(save_params),
                     eval_opt_state(opt_state), step=k + 1,
                     extra={"shard": args.shard,
-                           "stream_layers": bool(args.stream_layers)},
+                           "stream_layers": bool(args.stream_layers),
+                           "stream_scan": bool(args.stream_scan)},
                 )
 
         if gossip_mode == "overlap":
@@ -321,7 +352,8 @@ def main():
             ckpt_lib.save_run(
                 args.ckpt_dir, eval_params(params), eval_opt_state(opt_state),
                 step=args.steps, extra={"shard": args.shard,
-                           "stream_layers": bool(args.stream_layers)},
+                           "stream_layers": bool(args.stream_layers),
+                           "stream_scan": bool(args.stream_scan)},
             )
         if args.csv:
             os.makedirs(os.path.dirname(args.csv) or ".", exist_ok=True)

@@ -144,16 +144,36 @@ class ParamGroup:
 
     ``keys`` are the top-level param-path prefixes the group covers.
     Block groups of an *unrolled* segment additionally carry the layer
-    index into the segment's stacked leading dim (``layer``); scanned /
-    periodic segments stream as one group (their ``lax.scan`` consumes
-    the whole stacked subtree at once, so the group IS the streaming
-    granularity there).
-    """
+    index into the segment's stacked leading dim (``layer``). Scanned /
+    periodic segments are one group whose every leaf carries a leading
+    ``repeats`` scan dim; a scan-aware layout streams them **per scan
+    iteration** (one layer row at a time) rather than as one stack-sized
+    gather — ``repeats`` is the iteration count (``None`` for
+    non-scanned groups)."""
 
     name: str
     keys: Tuple[str, ...]
     segment: Optional[int] = None     # segment index for block groups
     layer: Optional[int] = None       # layer index within an unrolled segment
+    repeats: Optional[int] = None     # scan iterations for scanned groups
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanStreamBody:
+    """Scan-body view of a scanned/periodic segment for per-iteration
+    streaming: ``apply_layer(x, group_view) -> (x, aux)`` advances the
+    residual stream by ONE scan iteration (one block, or one full period
+    for a periodic segment) given a group view holding just that
+    iteration's params (leading scan dim stripped). The body recomputes
+    positions from ``x`` (teacher-forced training always starts at
+    position 0) and closes over static config only, so a caller may
+    place it under ``jax.custom_vjp``/``lax.scan`` with a gather
+    callback feeding ``group_view`` — the double-buffered prefetch path
+    of ``repro.dist.fsdp``."""
+
+    repeats: int
+    apply_layer: Callable[[jax.Array, Dict[str, Any]],
+                          Tuple[jax.Array, Dict[str, Any]]]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,11 +183,16 @@ class StreamStage:
     carry. ``apply(carry, group_trees) -> carry`` is pure; the caller
     owns materialization (all-gather) and remat boundaries, so the
     backward pass re-gathers a group instead of keeping its full-size
-    view live."""
+    view live. Stages over a scanned/periodic segment additionally
+    expose ``scan`` (a :class:`ScanStreamBody`) so a scan-aware caller
+    can gather one layer row per iteration instead of invoking
+    ``apply`` on the whole stacked subtree; ``apply`` remains the
+    stack-at-once fallback."""
 
     name: str
     group_ids: Tuple[int, ...]
     apply: Callable[[Dict[str, Any], Tuple[Any, ...]], Dict[str, Any]]
+    scan: Optional[ScanStreamBody] = None
 
 
 def _has_ffn(cfg: ModelConfig, seg: Segment) -> bool:
@@ -611,9 +636,14 @@ class Model:
             groups.append(ParamGroup("encoder", tuple(enc_keys)))
         for s, seg in enumerate(self.segments):
             key = f"blocks_{s}"
-            if isinstance(seg, PeriodicSegment) or seg.scanned:
-                # the scan consumes the whole stacked subtree at once
-                groups.append(ParamGroup(key, (key,), segment=s))
+            if isinstance(seg, PeriodicSegment):
+                groups.append(
+                    ParamGroup(key, (key,), segment=s, repeats=seg.reps)
+                )
+            elif seg.scanned:
+                groups.append(
+                    ParamGroup(key, (key,), segment=s, repeats=seg.count)
+                )
             else:
                 for i in range(seg.count):
                     groups.append(
@@ -624,6 +654,43 @@ class Model:
             head_keys.append("unembed")
         groups.append(ParamGroup("head", tuple(head_keys)))
         return tuple(groups)
+
+    def _scan_stream_body(self, seg, key: str) -> ScanStreamBody:
+        """Per-iteration body of a scanned/periodic segment for the
+        scan-aware streaming path. Mirrors ``_run_segment``'s scan body
+        (``_run_periodic``'s for periodic segments) arithmetic op for
+        op, minus caches/cross-attention (the training stream path);
+        positions are recomputed from ``x`` so the body closes over
+        static config only — a ``jax.custom_vjp`` boundary cannot close
+        over traced values."""
+        cfg = self.cfg
+
+        if isinstance(seg, PeriodicSegment):
+            def apply_period(x, view, _seg=seg):
+                p_slice = view[key]
+                positions = self._positions(x.shape[0], 0, x.shape[1])
+                aux = {"load_balance": jnp.float32(0.0),
+                       "router_z": jnp.float32(0.0)}
+                for j, sub in enumerate(_seg.pattern):
+                    x, _, a = self._layer_apply(
+                        p_slice[f"pos_{j}"], x, sub, positions=positions,
+                        cache=None, cache_spec=None, cross_kv=None,
+                        decode=False,
+                    )
+                    aux = {k: aux[k] + a[k] for k in aux}
+                return x, aux
+
+            return ScanStreamBody(repeats=seg.reps, apply_layer=apply_period)
+
+        def apply_layer(x, view, _seg=seg):
+            positions = self._positions(x.shape[0], 0, x.shape[1])
+            x, _, aux = self._layer_apply(
+                view[key], x, _seg, positions=positions, cache=None,
+                cache_spec=None, cross_kv=None, decode=False,
+            )
+            return x, aux
+
+        return ScanStreamBody(repeats=seg.count, apply_layer=apply_layer)
 
     def stream_stages(self, batch: dict) -> Tuple[StreamStage, ...]:
         """The teacher-forced forward+loss as a walk over layer groups.
@@ -694,7 +761,16 @@ class Model:
                     return {**carry, "x": x,
                             "aux": acc_aux(carry["aux"], aux)}
 
-                stages.append(StreamStage(g.name, (index[g.name],), seg_apply))
+                scan_body = None
+                if g.repeats is not None and not has_frames:
+                    # cross-attention threads encoder K/V through the
+                    # body — keep the stack-at-once fallback there
+                    scan_body = self._scan_stream_body(seg, g.keys[0])
+                stages.append(
+                    StreamStage(
+                        g.name, (index[g.name],), seg_apply, scan=scan_body
+                    )
+                )
             else:
                 def layer_apply(carry, groups, _g=g, _seg=seg):
                     (sub,) = groups

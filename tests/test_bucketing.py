@@ -228,3 +228,81 @@ def test_plan_group_buckets_rejects_bad_groups():
     assert multi.num_buckets > 1
     with pytest.raises(ValueError, match="exactly one bucket"):
         bucketing.GroupedPlan(names=("g",), plans=(multi,))
+
+
+def test_scan_aware_group_plan_per_layer_sizes():
+    """scan_aware planning strips the leading repeats dim: the group's
+    plan describes one layer row, bucket_sizes the full stack, and
+    max_group_elements the widest PER-ITERATION gather."""
+    R = 4
+    groups = [
+        ("embed", {"table": jnp.zeros((16, 8))}),                 # 128
+        ("blocks", {"w": jnp.zeros((R, 6, 5)), "b": jnp.zeros((R, 5))}),
+        ("head", {"norm": jnp.zeros((8,))}),
+    ]
+    gplan = bucketing.plan_group_buckets(
+        groups, pad_to=2, scan_aware=True, scan_repeats=(None, R, None)
+    )
+    assert gplan.repeats == (1, R, 1)
+    assert gplan.per_layer_sizes == (128, 36, 8)   # 35 padded to 36
+    assert gplan.bucket_sizes == (128, R * 36, 8)
+    assert gplan.max_group_elements == 128         # one layer, not the stack
+    assert gplan.max_scan_repeats == R
+    # a leaf without the leading scan dim is rejected
+    with pytest.raises(ValueError, match="leading repeats"):
+        bucketing.plan_group_buckets(
+            [("blocks", {"w": jnp.zeros((R, 3)), "b": jnp.zeros((3,))})],
+            scan_aware=True, scan_repeats=(R,),
+        )
+    # scan_aware=False keeps the stack-at-once layout (repeats all 1)
+    flat = bucketing.plan_group_buckets(groups, pad_to=2)
+    assert flat.repeats == (1, 1, 1)
+    assert flat.max_group_elements == max(flat.bucket_sizes)
+
+
+def test_scan_ravel_round_trips_shard_major():
+    """scan_ravel lays the stacked subtree out as shard-major rows: the
+    contiguous shard slice s holds every row's s-th piece, and a single
+    row re-assembles from the per-shard row stacks (the in-step
+    all_gather contract). Round-trips for local and node-stacked trees."""
+    R, S, N = 4, 2, 3
+    key = jax.random.key(0)
+    tree = {
+        "w": jax.random.normal(key, (R, 6, 5)),
+        "b": jax.random.normal(jax.random.key(1), (R, 5)),
+    }
+    per_plan = bucketing.plan_buckets(
+        jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
+                     tree),
+        target_bytes=None, pad_to=S,
+    )
+    per = per_plan.bucket_sizes[0]
+    flat = bucketing.scan_ravel(per_plan, tree, R, S)
+    assert flat.shape == (R * per,)
+    # shard-major: slice s == stacked s-th pieces of the per-layer rows
+    rows = bucketing.ravel_stacked(per_plan, tree)[0]        # (R, per)
+    for s in range(S):
+        piece = rows.reshape(R, S, per // S)[:, s]
+        np.testing.assert_array_equal(
+            np.asarray(flat.reshape(S, -1)[s]),
+            np.asarray(piece.reshape(-1)),
+        )
+    # gather contract: concatenating shard s's row i over s == row i
+    shard_rows = flat.reshape(S, R, per // S)
+    np.testing.assert_array_equal(
+        np.asarray(jnp.concatenate([shard_rows[s, 2] for s in range(S)])),
+        np.asarray(rows[2]),
+    )
+    back = bucketing.scan_unravel(per_plan, flat, R, S)
+    for got, want in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    stacked = jax.tree.map(
+        lambda a: jnp.stack([a * (i + 1) for i in range(N)]), tree
+    )
+    flat_n = bucketing.scan_ravel_stacked(per_plan, stacked, R, S)
+    assert flat_n.shape == (N, R * per)
+    np.testing.assert_array_equal(np.asarray(flat_n[0]), np.asarray(flat))
+    back_n = bucketing.scan_unravel_stacked(per_plan, flat_n, R, S)
+    for got, want in zip(jax.tree.leaves(back_n), jax.tree.leaves(stacked)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
