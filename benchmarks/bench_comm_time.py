@@ -75,60 +75,16 @@ def fsdp_bytes_table(
     segment's peak is one *layer row*, not the stack).
     ``num_layers``/``label`` deepen the smoke config so a scanned stack
     (``repeats >= SCAN_THRESHOLD``) actually forms and report it under a
-    distinct arch label."""
-    import dataclasses
+    distinct arch label.
 
-    import jax  # local: the analytic benches must not force a jax init
+    The byte math lives in ``repro.analysis.bytes_model`` — the same
+    formulas the static analyzer cross-checks against traced jaxprs, so
+    the artifact is verified, not merely asserted."""
+    from repro.analysis.bytes_model import fsdp_bytes_rows
 
-    from repro.configs.registry import get_smoke_config
-    from repro.dist import bucketing
-    from repro.dist.fsdp import param_group_subtrees
-    from repro.models.transformer import Model
-
-    cfg = get_smoke_config(arch)
-    if num_layers:
-        cfg = dataclasses.replace(cfg, num_layers=num_layers)
-    model = Model(cfg)
-    abs_local = jax.eval_shape(lambda: model.init(jax.random.key(0)))
-    groups = tuple(model.param_group_specs())
-    named_groups = param_group_subtrees(
-        model, abs_local=abs_local, groups=groups
+    return fsdp_bytes_rows(
+        arch, shard_factors, num_layers=num_layers, label=label
     )
-    scan_repeats = tuple(g.repeats for g in groups)
-    raw_bytes = 4 * int(
-        sum(np.prod(leaf.shape) for leaf in jax.tree.leaves(abs_local))
-    )
-    rows = []
-    for s in shard_factors:
-        bplan = bucketing.plan_buckets(abs_local, pad_to=s)
-        gplan = bucketing.plan_group_buckets(list(named_groups), pad_to=s)
-        splan = bucketing.plan_group_buckets(
-            list(named_groups), pad_to=s,
-            scan_aware=True, scan_repeats=scan_repeats,
-        )
-        per_device = bplan.total_elements // s * 4
-        # one matching's ppermute sends each node's local slice of every
-        # bucket exactly once (equal to the per-device resident bytes in
-        # this design, but accounted per bucket so the two can diverge
-        # if the cost model ever does)
-        per_matching = 4 * sum(sz // s for sz in bplan.bucket_sizes)
-        reps = int(splan.max_scan_repeats)
-        rows.append(dict(
-            arch=label or arch,
-            shard=int(s),
-            raw_param_bytes=raw_bytes,
-            padded_param_bytes=bplan.total_elements * 4,
-            per_device_param_bytes=int(per_device),
-            per_matching_comm_bytes=int(per_matching),
-            # the largest full-size view the fwd/bwd ever materializes
-            peak_transient_bytes_monolithic=bplan.total_elements * 4,
-            peak_transient_bytes_streamed=gplan.max_group_elements * 4,
-            # scan-aware plan: a scanned group's peak is one layer row
-            peak_transient_bytes_scan_streamed=splan.max_group_elements * 4,
-            num_scan_iterations=reps if reps > 1 else 0,
-            num_layer_groups=gplan.num_buckets,
-        ))
-    return rows
 
 
 def per_node_comm_time(plan) -> np.ndarray:

@@ -1,0 +1,46 @@
+"""Static comm-lint: jaxpr-level verification of MATCHA's invariants.
+
+The runtime's whole value proposition rests on structural claims —
+every sampled subgraph decomposes into vertex-disjoint matchings, each
+matching's ppermute is an involution, each layout moves exactly the
+predicted bytes (1/S per shard, O(layer-row) transients under
+scan-streaming) — that used to be spot-checked by test-local jaxpr
+walkers and an asserted-but-never-cross-verified byte table. This
+package traces each execution strategy to a closed jaxpr and checks the
+traced program against the declared plan:
+
+``traversal``    one shared jaxpr walk (through ``shard_map``, ``scan``,
+                 ``remat``/``checkpoint``, ``custom_vjp`` and ``pjit``
+                 sub-jaxprs) — the single implementation behind the
+                 collective inventory, the memory-ladder tests and the
+                 CLI.
+``collectives``  structured inventory of every ``ppermute`` /
+                 ``all_gather`` / ``psum_scatter`` / ``psum`` with axis,
+                 dtype, static byte count and (for ppermute) the
+                 permutation pairs.
+``bytes_model``  the analytic per-device / per-matching / peak-transient
+                 byte model, shared with ``benchmarks.bench_comm_time``
+                 so the benchmark artifact and the checker can never
+                 drift apart.
+``checks``       the invariant checkers (matching validity, collective
+                 axis contract, byte-budget cross-check, memory ladder,
+                 dtype lint) producing named ``Violation`` records.
+``check``        the CLI: ``python -m repro.analysis.check --preset
+                 tiny --shard 2 --all-layouts --strict`` emits a JSON
+                 report and exits nonzero on any violation.
+"""
+_TRAVERSAL_API = (
+    "EqnContext", "iter_eqns", "max_fp_intermediate", "sub_jaxprs",
+    "to_closed_jaxpr",
+)
+
+
+def __getattr__(name):
+    # Lazy re-exports: ``python -m repro.analysis.check`` must be able
+    # to set XLA_FLAGS (host device count) before anything imports jax,
+    # and importing this package must therefore stay jax-free.
+    if name in _TRAVERSAL_API:
+        from repro.analysis import traversal
+
+        return getattr(traversal, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

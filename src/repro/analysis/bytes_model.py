@@ -1,0 +1,159 @@
+"""The analytic byte model, shared by the checker and the benchmark.
+
+``benchmarks.bench_comm_time.fsdp_bytes_table`` used to compute these
+rows itself; now both the benchmark artifact (``BENCH_comm_time.json``)
+and ``repro.analysis.checks`` call into this module, so the asserted
+table and the jaxpr-verified one can never drift apart: the analyzer
+re-derives every column from the traced program and the benchmark
+re-derives it from the bucket layouts — through the exact same formulas.
+
+Columns (all bytes, fp32 buckets unless noted):
+
+* ``per_device_param_bytes``            resident shard per device:
+                                        ``total_elements / S * 4``.
+* ``per_matching_comm_bytes``           one matching's ppermute traffic
+                                        per device: each bucket's local
+                                        slice sent once,
+                                        ``4 * sum(size_b / S)``.
+* ``peak_transient_bytes_monolithic``   the whole padded replica — the
+                                        monolithic layout gathers every
+                                        bucket before the fwd.
+* ``peak_transient_bytes_streamed``     largest layer group — streamed
+                                        layouts gather one group at a
+                                        time (and re-gather in the bwd).
+* ``peak_transient_bytes_scan_streamed``  largest group under the
+                                        scan-aware plan: a scanned
+                                        segment's peak is one *layer
+                                        row*, not the stack.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "bucket_plan_bytes",
+    "fsdp_bytes_row",
+    "fsdp_bytes_rows",
+    "tree_storage_bytes",
+]
+
+_FP32_BYTES = 4  # gossip/fsdp buckets are always fp32 (see dist.bucketing)
+
+
+def tree_storage_bytes(abs_tree) -> int:
+    """Storage bytes of an abstract pytree, honoring each leaf's dtype.
+
+    This is the replicated runtime's per-matching gossip traffic: the
+    masked/static modes ppermute every param leaf as stored (bf16 leaves
+    move 2 bytes/element, fp32 leaves 4).
+    """
+    import jax  # local: keep the analytic model importable without jax init
+
+    return int(
+        sum(
+            int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+            for leaf in jax.tree.leaves(abs_tree)
+        )
+    )
+
+
+def bucket_plan_bytes(bplan, shard: int) -> dict:
+    """Per-device resident and per-matching gossip bytes of a bucket plan."""
+    return dict(
+        per_device_param_bytes=bplan.total_elements // shard * _FP32_BYTES,
+        # one matching's ppermute sends each node's local slice of every
+        # bucket exactly once (equal to the per-device resident bytes in
+        # this design, but accounted per bucket so the two can diverge
+        # if the cost model ever does)
+        per_matching_comm_bytes=_FP32_BYTES
+        * sum(sz // shard for sz in bplan.bucket_sizes),
+    )
+
+
+def fsdp_bytes_row(
+    *, bplan, gplan, splan, shard: int, arch: str, raw_param_bytes: int
+) -> dict:
+    """One artifact row from the three bucket layouts at one shard factor.
+
+    ``bplan`` is the monolithic ``plan_buckets(pad_to=S)`` plan, ``gplan``
+    the per-layer-group plan, ``splan`` the scan-aware group plan.
+    """
+    reps = int(splan.max_scan_repeats)
+    row = dict(
+        arch=arch,
+        shard=int(shard),
+        raw_param_bytes=int(raw_param_bytes),
+        padded_param_bytes=bplan.total_elements * _FP32_BYTES,
+    )
+    bp = bucket_plan_bytes(bplan, shard)
+    row.update(
+        per_device_param_bytes=int(bp["per_device_param_bytes"]),
+        per_matching_comm_bytes=int(bp["per_matching_comm_bytes"]),
+        # the largest full-size view the fwd/bwd ever materializes
+        peak_transient_bytes_monolithic=bplan.total_elements * _FP32_BYTES,
+        peak_transient_bytes_streamed=gplan.max_group_elements * _FP32_BYTES,
+        # scan-aware plan: a scanned group's peak is one layer row
+        peak_transient_bytes_scan_streamed=splan.max_group_elements
+        * _FP32_BYTES,
+        num_scan_iterations=reps if reps > 1 else 0,
+        num_layer_groups=gplan.num_buckets,
+    )
+    return row
+
+
+def fsdp_bytes_rows(
+    arch: str = "internlm2_1_8b",
+    shard_factors=(1, 2, 4),
+    *,
+    num_layers: int = 0,
+    label: str = "",
+) -> list:
+    """Analytic rows for one smoke arch across shard factors.
+
+    Builds the real bucket layouts (``pad_to=S``) of the smoke model —
+    abstract shapes only, nothing is allocated. ``num_layers``/``label``
+    deepen the smoke config so a scanned stack actually forms and report
+    it under a distinct arch label.
+    """
+    import dataclasses
+
+    import jax  # local: the analytic benches must not force a jax init
+
+    from repro.configs.registry import get_smoke_config
+    from repro.dist import bucketing
+    from repro.dist.fsdp import param_group_subtrees
+    from repro.models.transformer import Model
+
+    cfg = get_smoke_config(arch)
+    if num_layers:
+        cfg = dataclasses.replace(cfg, num_layers=num_layers)
+    model = Model(cfg)
+    abs_local = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    groups = tuple(model.param_group_specs())
+    named_groups = param_group_subtrees(model, abs_local=abs_local, groups=groups)
+    scan_repeats = tuple(g.repeats for g in groups)
+    raw_bytes = _FP32_BYTES * int(
+        sum(np.prod(leaf.shape) for leaf in jax.tree.leaves(abs_local))
+    )
+    rows = []
+    for s in shard_factors:
+        bplan = bucketing.plan_buckets(abs_local, pad_to=s)
+        gplan = bucketing.plan_group_buckets(list(named_groups), pad_to=s)
+        splan = bucketing.plan_group_buckets(
+            list(named_groups),
+            pad_to=s,
+            scan_aware=True,
+            scan_repeats=scan_repeats,
+        )
+        rows.append(
+            fsdp_bytes_row(
+                bplan=bplan,
+                gplan=gplan,
+                splan=splan,
+                shard=int(s),
+                arch=label or arch,
+                raw_param_bytes=raw_bytes,
+            )
+        )
+    return rows

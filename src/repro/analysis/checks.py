@@ -1,0 +1,490 @@
+"""Invariant checkers over collective inventories and traced jaxprs.
+
+Each checker returns a list of :class:`Violation` records (empty =
+clean) instead of raising, so the CLI can run every check on every
+execution strategy and emit one JSON report.  The expectations come
+from the declarations the dist modules export (``COLLECTIVE_CONTRACT``,
+``FP32_UPCAST_SITES``) and from the plan metadata
+(``MatchaPlan.ppermute_pairs``) — the analyzer never re-invents the
+contract, it verifies the traced program against the declared one.
+
+Violation names are stable API (tests and CI grep for them):
+
+``ppermute-bad-axes``            gossip ppermute not on the node axes
+``ppermute-out-of-range``        pair endpoint outside [0, num_nodes)
+``ppermute-duplicate-dest``      node receives from two sources
+                                 (matching degree > 1)
+``ppermute-not-involution``      partners don't swap symmetrically
+``ppermute-unplanned``           traced permutation matches no plan row
+``matching-not-exchanged``       a plan row never ppermuted (masked
+                                 modes must exchange every matching)
+``collective-bad-axes``          all_gather/psum_scatter/psum off its
+                                 contracted axes
+``collective-in-bucketing``      a collective traced from the
+                                 collective-free bucketing module
+``unexpected-collective``        gossip collective in a no-gossip step
+``bytes-mismatch``               jaxpr-derived byte count disagrees
+                                 with the analytic model (> tolerance)
+``artifact-mismatch``            analytic model disagrees with the
+                                 committed BENCH_comm_time.json
+``ladder-bound-exceeded``        fp intermediate above the layout's
+                                 memory-ladder bound
+``scan-residual-materialized``   scan-streamed step holds a stacked
+                                 (repeats, per_layer) residual
+``monolithic-not-materialized``  monolithic step traced *below* the
+                                 full-replica bound (walker regression)
+``f64-leak``                     any float64 value in the program
+``fp32-upcast-unwhitelisted``    fp32 widening in the dist layer
+                                 outside the declared accumulation sites
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.collectives import ppermute_totals
+from repro.analysis.traversal import iter_eqns, source_frames, to_closed_jaxpr
+
+__all__ = [
+    "Violation",
+    "check_bytes_fsdp",
+    "check_collective_axes",
+    "check_dtypes",
+    "check_memory_ladder",
+    "check_ppermutes",
+    "check_within",
+    "cross_check_artifact",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    name: str
+    detail: str
+    where: str = ""
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Matching validity + gossip axis contract (per ppermute record)
+# ---------------------------------------------------------------------------
+def _perm_violations(perm, num_nodes: int, where: str) -> list:
+    out = []
+    seen_src: dict = {}
+    seen_dst: dict = {}
+    for s, d in perm:
+        if not (0 <= s < num_nodes and 0 <= d < num_nodes):
+            out.append(
+                Violation(
+                    "ppermute-out-of-range",
+                    f"pair ({s}, {d}) outside [0, {num_nodes})",
+                    where,
+                )
+            )
+            continue
+        if d in seen_dst:
+            out.append(
+                Violation(
+                    "ppermute-duplicate-dest",
+                    f"node {d} receives from both {seen_dst[d]} and {s} "
+                    "— matching degree > 1",
+                    where,
+                )
+            )
+        seen_dst[d] = s
+        seen_src[s] = d
+    if not out:
+        for s, d in perm:
+            if seen_src.get(d) != s:
+                out.append(
+                    Violation(
+                        "ppermute-not-involution",
+                        f"node {s} sends to {d} but {d} sends to "
+                        f"{seen_src.get(d)} — partners must swap",
+                        where,
+                    )
+                )
+                break
+    return out
+
+
+def check_ppermutes(
+    records,
+    *,
+    num_nodes: int,
+    node_axes,
+    planned_pairs=None,
+    expect_all_planned: bool = False,
+    where: str = "",
+) -> list:
+    """Matching validity + node-axis contract for every traced ppermute.
+
+    ``planned_pairs`` is ``MatchaPlan.ppermute_pairs()`` (or None to
+    skip plan matching); ``expect_all_planned`` additionally requires
+    every plan row to appear (the masked/sequential/overlap modes
+    exchange all M matchings every step).
+    """
+    out = []
+    node_axes = tuple(node_axes)
+    planned = (
+        None
+        if planned_pairs is None
+        else {tuple(sorted(p)) for p in planned_pairs}
+    )
+    traced = set()
+    for r in records:
+        if r.kind != "ppermute":
+            continue
+        if tuple(r.axes) != node_axes:
+            out.append(
+                Violation(
+                    "ppermute-bad-axes",
+                    f"ppermute over {tuple(r.axes)}; gossip exchanges run "
+                    f"over the node axes {node_axes} only",
+                    where,
+                )
+            )
+        out.extend(_perm_violations(r.perm, num_nodes, where))
+        key = tuple(sorted(r.perm))
+        traced.add(key)
+        if planned is not None and key not in planned:
+            out.append(
+                Violation(
+                    "ppermute-unplanned",
+                    f"permutation {list(r.perm)} matches no plan matching",
+                    where,
+                )
+            )
+    if planned is not None and expect_all_planned:
+        for j, p in enumerate(planned_pairs):
+            if tuple(sorted(p)) not in traced:
+                out.append(
+                    Violation(
+                        "matching-not-exchanged",
+                        f"plan matching {j} never ppermuted in this step",
+                        where,
+                    )
+                )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Collective axis contract (declared by the dist modules)
+# ---------------------------------------------------------------------------
+def check_collective_axes(records, *, where: str = "") -> list:
+    """all_gather/psum_scatter/psum against ``fsdp.COLLECTIVE_CONTRACT``,
+    plus the bucketing module's collective-free declaration.  ppermute
+    axes are checked by :func:`check_ppermutes` (they resolve against
+    the run's node axes, which this function doesn't know)."""
+    from repro.dist import bucketing, fsdp
+
+    out = []
+    contract = fsdp.COLLECTIVE_CONTRACT
+    bucketing_file = os.path.abspath(bucketing.__file__)
+    for r in records:
+        if r.source and os.path.abspath(r.source[0]) == bucketing_file:
+            out.append(
+                Violation(
+                    "collective-in-bucketing",
+                    f"{r.kind} traced from {r.source[1]} in the "
+                    "collective-free bucketing module",
+                    where,
+                )
+            )
+        spec = contract.get(r.kind)
+        if spec is None:
+            continue
+        axes = tuple(r.axes)
+        if "axes" in spec and axes != tuple(spec["axes"]):
+            out.append(
+                Violation(
+                    "collective-bad-axes",
+                    f"{r.kind} over {axes}; contract requires "
+                    f"{tuple(spec['axes'])}",
+                    where,
+                )
+            )
+        elif "axes_subset_of" in spec and not set(axes) <= set(
+            spec["axes_subset_of"]
+        ):
+            out.append(
+                Violation(
+                    "collective-bad-axes",
+                    f"{r.kind} over {axes}; contract allows only axes "
+                    f"within {tuple(spec['axes_subset_of'])}",
+                    where,
+                )
+            )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Byte-budget cross-checks
+# ---------------------------------------------------------------------------
+def check_within(
+    name: str, got: float, want: float, *, tol: float = 0.01, where: str = ""
+) -> list:
+    """``got`` within ``tol`` (relative) of ``want``, else one
+    ``bytes-mismatch`` violation labelled ``name``."""
+    if abs(got - want) <= tol * max(abs(want), 1):
+        return []
+    return [
+        Violation(
+            "bytes-mismatch",
+            f"{name}: traced {got} vs analytic {want} "
+            f"(> {tol:.0%} apart)",
+            where,
+        )
+    ]
+
+
+def check_bytes_fsdp(
+    records,
+    row: dict,
+    *,
+    layout_kind: str,
+    gossip: bool,
+    tol: float = 0.01,
+    where: str = "",
+) -> list:
+    """Jaxpr-derived bytes vs one analytic ``fsdp_bytes_row``.
+
+    * per-matching: every distinct traced permutation's total ppermute
+      bytes must equal ``per_matching_comm_bytes`` (each matching sends
+      each bucket's local slice exactly once).
+    * gathers: the monolithic step's all_gathers must sum to the padded
+      replica (its peak transient); a streamed step's *largest* gather
+      must equal its peak-transient column (streamed steps re-gather in
+      the bwd, so the sum over-counts by design — the peak is the max).
+    """
+    out = []
+    if gossip:
+        totals = ppermute_totals(records)
+        if not totals:
+            out.append(
+                Violation(
+                    "bytes-mismatch",
+                    "gossip step traced zero ppermutes",
+                    where,
+                )
+            )
+        for perm, total in totals.items():
+            out.extend(
+                check_within(
+                    "per_matching_comm_bytes",
+                    total,
+                    row["per_matching_comm_bytes"],
+                    tol=tol,
+                    where=where,
+                )
+            )
+    gathers = [r for r in records if r.kind == "all_gather"]
+    if not gathers:
+        return out + [
+            Violation(
+                "bytes-mismatch", "fsdp step traced zero all_gathers", where
+            )
+        ]
+    if layout_kind == "monolithic":
+        fwd = sum(r.bytes for r in gathers)
+        out.extend(
+            check_within(
+                "peak_transient_bytes_monolithic (sum of gathers)",
+                fwd,
+                row["peak_transient_bytes_monolithic"],
+                tol=tol,
+                where=where,
+            )
+        )
+    else:
+        col = (
+            "peak_transient_bytes_scan_streamed"
+            if layout_kind == "scan_streamed"
+            else "peak_transient_bytes_streamed"
+        )
+        out.extend(
+            check_within(
+                f"{col} (largest gather)",
+                max(r.bytes for r in gathers),
+                row[col],
+                tol=tol,
+                where=where,
+            )
+        )
+    return out
+
+
+def cross_check_artifact(
+    analytic_row: dict, artifact_row: dict, *, tol: float = 0.01,
+    where: str = "",
+) -> list:
+    """The committed ``BENCH_comm_time.json`` row vs the freshly-derived
+    analytic row: the artifact is only trustworthy if the formulas that
+    produced it still describe the current layouts."""
+    out = []
+    for field in (
+        "per_device_param_bytes",
+        "per_matching_comm_bytes",
+        "peak_transient_bytes_monolithic",
+        "peak_transient_bytes_streamed",
+        "peak_transient_bytes_scan_streamed",
+    ):
+        if field not in artifact_row:
+            continue
+        got, want = analytic_row[field], artifact_row[field]
+        if abs(got - want) > tol * max(abs(want), 1):
+            out.append(
+                Violation(
+                    "artifact-mismatch",
+                    f"{field}: analytic {got} vs committed artifact {want}",
+                    where,
+                )
+            )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Memory-ladder bounds (reusable: CLI + tests/test_stream_fsdp.py)
+# ---------------------------------------------------------------------------
+def ladder_bound(layout) -> int:
+    """Upper bound (fp32 elements) on any per-device fp intermediate of
+    a *streamed* step: one gathered group view (a scanned group
+    contributes one layer row) plus the resident shard slice."""
+    return layout.plan.max_group_elements + layout.per_device_elements
+
+
+def check_memory_ladder(max_fp: int, layout, *, where: str = "") -> list:
+    """The memory-ladder rule for one traced step's largest per-device
+    fp intermediate (``traversal.max_fp_intermediate``), per layout.
+
+    Trace with ``gossip_mode="none"``: the Pallas gossip-axpy kernel
+    pads its resident-shard operands to 256k-element tiles — a
+    layout-independent intermediate that drowns the streaming signal.
+    """
+    from repro.dist.fsdp import FsdpStreamLayout
+
+    out = []
+    if isinstance(layout, FsdpStreamLayout):
+        bound = ladder_bound(layout)
+        if max_fp > bound:
+            out.append(
+                Violation(
+                    "ladder-bound-exceeded",
+                    f"largest fp intermediate {max_fp} elements > "
+                    f"max_group + resident slice = {bound}",
+                    where,
+                )
+            )
+        scanned = [
+            size
+            for size, r in zip(layout.plan.bucket_sizes, layout.plan.repeats)
+            if r > 1
+        ]
+        if scanned and max_fp >= min(scanned):
+            out.append(
+                Violation(
+                    "scan-residual-materialized",
+                    f"largest fp intermediate {max_fp} elements >= a "
+                    f"scanned group's stacked size {min(scanned)} — the "
+                    "backward is holding a (repeats, per_layer) residual",
+                    where,
+                )
+            )
+    else:
+        total = layout.plan.total_elements
+        if max_fp < total:
+            out.append(
+                Violation(
+                    "monolithic-not-materialized",
+                    f"monolithic step's largest fp intermediate {max_fp} < "
+                    f"full replica {total} — traversal missed the gather",
+                    where,
+                )
+            )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dtype lint
+# ---------------------------------------------------------------------------
+def _dist_upcast_whitelist() -> dict:
+    """{abs file path: declared FP32_UPCAST_SITES} for the dist layer."""
+    from repro.dist import bucketing, fsdp, gossip
+
+    return {
+        os.path.abspath(m.__file__): tuple(m.FP32_UPCAST_SITES)
+        for m in (gossip, fsdp, bucketing)
+    }
+
+
+def check_dtypes(step, *args, where: str = "") -> list:
+    """No f64 anywhere; no fp32 widening in the dist layer outside the
+    declared ``FP32_UPCAST_SITES``.
+
+    The fp32-upcast lint is scoped to equations whose innermost user
+    frame lies in ``dist/{gossip,fsdp,bucketing}.py`` — model code
+    legitimately upcasts activations (softmax, norms, loss) under its
+    own compute-dtype policy, but a stray bucket-shard widening in the
+    dist layer silently doubles gossip/optimizer traffic.
+    """
+    closed = to_closed_jaxpr(step, *args)
+    out = []
+    whitelist = _dist_upcast_whitelist()
+    f64_seen = False
+
+    def is_f64(aval) -> bool:
+        dt = getattr(aval, "dtype", None)
+        return dt is not None and dt in (jnp.float64, np.complex128)
+
+    for v in closed.jaxpr.invars:
+        if is_f64(getattr(v, "aval", None)) and not f64_seen:
+            f64_seen = True
+            out.append(
+                Violation(
+                    "f64-leak", "float64 input to the traced step", where
+                )
+            )
+    for eqn, _ctx in iter_eqns(closed):
+        for ov in eqn.outvars:
+            if not f64_seen and is_f64(getattr(ov, "aval", None)):
+                f64_seen = True
+                out.append(
+                    Violation(
+                        "f64-leak",
+                        f"{eqn.primitive} produces float64 "
+                        f"{tuple(ov.aval.shape)}",
+                        where,
+                    )
+                )
+        if str(eqn.primitive) != "convert_element_type":
+            continue
+        new = eqn.params.get("new_dtype")
+        src = getattr(eqn.invars[0], "aval", None)
+        if new != jnp.float32 or src is None:
+            continue
+        if src.dtype not in (jnp.bfloat16, jnp.float16):
+            continue
+        frames = source_frames(eqn)
+        if not frames:
+            continue
+        fname, func, line = frames[0]
+        sites = whitelist.get(os.path.abspath(fname))
+        if sites is None:
+            continue  # outside the dist layer: model-code policy
+        if func not in sites:
+            out.append(
+                Violation(
+                    "fp32-upcast-unwhitelisted",
+                    f"{src.dtype} -> float32 at {os.path.basename(fname)}:"
+                    f"{line} in {func}() — not a declared "
+                    "FP32_UPCAST_SITES accumulation point",
+                    where,
+                )
+            )
+    return out

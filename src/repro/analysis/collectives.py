@@ -1,0 +1,138 @@
+"""Structured inventory of the collectives inside a traced step.
+
+Folds :func:`repro.analysis.traversal.iter_eqns` into a list of
+:class:`CollectiveRecord` — one per ``ppermute`` / ``all_gather`` /
+``psum_scatter`` / ``psum`` equation — with the axis names, dtype, static
+byte count and (for ppermute) the permutation pairs.  ``reduce_scatter``
+is what ``jax.lax.psum_scatter`` traces to, so it is canonicalized to
+``"psum_scatter"``; ``pmean`` traces to ``psum`` + ``div`` and shows up
+as ``"psum"``.
+
+Byte conventions (all static, per device, per execution):
+
+* ``ppermute``      operand bytes — what one device sends on the link.
+* ``all_gather``    *output* bytes — the transient the gather
+                    materializes (this is what the memory ladder bounds).
+* ``psum_scatter``  operand bytes — the full block fed to the reduction.
+* ``psum``          operand bytes.
+
+``scan_trips`` records how many times an enclosing ``lax.scan`` executes
+the collective per step call; totals that care (e.g. scan-streamed
+gather traffic) multiply by it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import numpy as np
+
+from repro.analysis.traversal import iter_eqns, source_frames, to_closed_jaxpr
+
+__all__ = ["COLLECTIVE_KINDS", "CollectiveRecord", "collect", "ppermute_totals"]
+
+COLLECTIVE_KINDS = ("ppermute", "all_gather", "psum_scatter", "psum")
+
+# traced primitive name -> canonical record kind
+_PRIM_TO_KIND = {
+    "ppermute": "ppermute",
+    "all_gather": "all_gather",
+    "reduce_scatter": "psum_scatter",
+    "psum": "psum",
+}
+
+
+@dataclass(frozen=True)
+class CollectiveRecord:
+    kind: str  # one of COLLECTIVE_KINDS
+    axes: tuple  # mesh axis names the collective runs over
+    dtype: str
+    shape: tuple  # aval shape the byte count is derived from
+    bytes: int  # static bytes per device per execution (see module doc)
+    scan_trips: int  # executions per step due to enclosing scans
+    in_manual: bool  # inside a shard_map region (per-device shapes)
+    perm: tuple | None  # ppermute only: ((src, dst), ...) pairs
+    path: tuple  # enclosing primitive names, outermost first
+    source: tuple  # innermost user frame (file, function, line), or ()
+
+    def to_json(self) -> dict:
+        return {
+            "kind": self.kind,
+            "axes": list(self.axes),
+            "dtype": self.dtype,
+            "shape": list(self.shape),
+            "bytes": self.bytes,
+            "scan_trips": self.scan_trips,
+            "in_manual": self.in_manual,
+            "perm": [list(p) for p in self.perm] if self.perm is not None else None,
+            "path": list(self.path),
+            "source": list(self.source) if self.source else None,
+        }
+
+
+def _axis_names(eqn) -> tuple:
+    """Normalize the axis param (``axes`` or ``axis_name``) to a str tuple."""
+    ax = eqn.params.get("axes", eqn.params.get("axis_name", ()))
+    if not isinstance(ax, (list, tuple)):
+        ax = (ax,)
+    return tuple(str(a) for a in ax)
+
+
+def _aval_bytes(aval) -> tuple:
+    shape = tuple(int(d) for d in aval.shape)
+    n = int(np.prod(shape)) if shape else 1
+    return shape, n * np.dtype(aval.dtype).itemsize, str(aval.dtype)
+
+
+def collect(step: Any, *args: Any) -> list:
+    """Inventory every collective in ``step`` (callable, Jaxpr or ClosedJaxpr).
+
+    ``*args`` are example arguments when ``step`` is a callable.
+    """
+    closed = to_closed_jaxpr(step, *args)
+    records = []
+    for eqn, ctx in iter_eqns(closed):
+        kind = _PRIM_TO_KIND.get(str(eqn.primitive))
+        if kind is None:
+            continue
+        # all_gather's transient is its output; the others are sized by
+        # what each device contributes.
+        aval = (eqn.outvars if kind == "all_gather" else eqn.invars)[0].aval
+        shape, nbytes, dtype = _aval_bytes(aval)
+        perm = None
+        if kind == "ppermute":
+            perm = tuple(
+                (int(s), int(d)) for s, d in eqn.params.get("perm", ())
+            )
+        frames = source_frames(eqn)
+        records.append(
+            CollectiveRecord(
+                kind=kind,
+                axes=_axis_names(eqn),
+                dtype=dtype,
+                shape=shape,
+                bytes=nbytes,
+                scan_trips=ctx.scan_trips,
+                in_manual=ctx.in_manual,
+                perm=perm,
+                path=ctx.path,
+                source=frames[0] if frames else (),
+            )
+        )
+    return records
+
+
+def ppermute_totals(records: list) -> dict:
+    """Total ppermute bytes per distinct permutation.
+
+    Distinct matchings produce distinct permutations, so grouping by the
+    ``(src, dst)`` pair tuple recovers per-matching link traffic even
+    when one matching's exchange is split across many buckets.
+    """
+    totals: dict = {}
+    for r in records:
+        if r.kind != "ppermute":
+            continue
+        totals[r.perm] = totals.get(r.perm, 0) + r.bytes * r.scan_trips
+    return totals

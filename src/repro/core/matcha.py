@@ -17,7 +17,11 @@ from repro.core.budget import (
     optimize_activation_probabilities,
 )
 from repro.core.graphs import Graph
-from repro.core.matching import matching_decomposition, matching_permutation
+from repro.core.matching import (
+    matching_decomposition,
+    matching_permutation,
+    validate_permutations,
+)
 from repro.core.topology import (
     TopologySchedule,
     matcha_schedule,
@@ -41,9 +45,25 @@ class MatchaPlan:
     lambda2: float                    # algebraic connectivity of E[L]
     comm_budget: float
 
+    def __post_init__(self):
+        # Plan-time validation instead of trusting the sampler: every
+        # schedule row ppermutes with one of these permutations, so a
+        # non-involution here would silently corrupt the mixing step.
+        validate_permutations(self.permutations, self.graph.m)
+
     @property
     def num_matchings(self) -> int:
         return len(self.matchings)
+
+    def ppermute_pairs(self) -> Tuple[Tuple[Tuple[int, int], ...], ...]:
+        """Per matching, the exact ``(source, dest)`` pairs its gossip
+        ppermute is issued with (fixed points map to themselves — see
+        ``repro.dist.gossip._pairs``).  This is the plan metadata the
+        static analyzer matches traced ppermutes against."""
+        return tuple(
+            tuple((i, int(p[i])) for i in range(self.graph.m))
+            for p in np.asarray(self.permutations)
+        )
 
     @property
     def expected_comm_units(self) -> float:

@@ -196,6 +196,52 @@ def matching_decomposition(graph: Graph) -> List[Graph]:
     return matchings
 
 
+def validate_permutations(permutations, num_nodes: int) -> np.ndarray:
+    """Check every row of a ``(M, m)`` permutation stack is a matching.
+
+    A matching's node permutation must be an in-range involution —
+    partners swapped, everyone else fixed, so each node has gossip
+    degree <= 1.  ``plan_matcha``/``plan_vanilla``/``plan_periodic``
+    call this at plan time (via ``MatchaPlan``) instead of trusting the
+    sampler; the static analyzer re-checks the same property on the
+    ppermute pairs it finds in traced jaxprs.
+
+    Raises ``ValueError`` naming the offending matching id.  Returns the
+    validated stack as an int array.
+    """
+    perms = np.asarray(permutations)
+    if perms.ndim != 2 or perms.shape[1] != num_nodes:
+        raise ValueError(
+            f"permutations must be (M, {num_nodes}), got {perms.shape}"
+        )
+    if not np.issubdtype(perms.dtype, np.integer):
+        raise ValueError(
+            f"permutations must be integer node indices, got {perms.dtype}"
+        )
+    idx = np.arange(num_nodes)
+    for j, perm in enumerate(perms):
+        if perm.min(initial=0) < 0 or perm.max(initial=-1) >= num_nodes:
+            raise ValueError(
+                f"matching {j}: permutation targets out of range "
+                f"[0, {num_nodes}): {perm.tolist()}"
+            )
+        counts = np.bincount(perm, minlength=num_nodes)
+        if (counts > 1).any():
+            dup = int(np.argmax(counts > 1))
+            raise ValueError(
+                f"matching {j}: node {dup} is the partner of "
+                f"{int(counts[dup])} nodes — a matching has degree <= 1"
+            )
+        if not (perm[perm] == idx).all():
+            bad = int(np.argmax(perm[perm] != idx))
+            raise ValueError(
+                f"matching {j}: permutation is not an involution — node "
+                f"{bad} maps to {int(perm[bad])} but "
+                f"{int(perm[bad])} maps to {int(perm[perm[bad]])}"
+            )
+    return perms
+
+
 def matching_permutation(matching: Graph) -> np.ndarray:
     """A matching as a node permutation: partners swapped, others fixed.
 

@@ -66,6 +66,19 @@ PyTree = Any
 
 DEFAULT_TARGET_BYTES = 4 << 20   # 4 MiB of fp32 per bucket
 
+# --- static-analysis contract (consumed by repro.analysis.checks) ----------
+# Bucketing is collective-free: every transform here is a pure reshape/
+# concatenate/pad with no mesh communication — the analyzer flags any
+# collective whose source traces back to this file.
+COLLECTIVE_CONTRACT: dict = {}
+# ravel/ravel_stacked widen storage-dtype leaves into the fp32 buckets;
+# that is THE sanctioned bucket-shard upcast (gossip and the optimizer
+# then stay in fp32 until the storage-dtype cast at materialization).
+FP32_UPCAST_SITES = (
+    "ravel",
+    "ravel_stacked",
+)
+
 
 @dataclasses.dataclass(frozen=True)
 class BucketPlan:

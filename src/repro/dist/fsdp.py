@@ -101,6 +101,25 @@ PyTree = Any
 
 FSDP_GOSSIP_MODES = ("sequential", "overlap", "none")
 
+# --- static-analysis contract (consumed by repro.analysis.checks) ----------
+# Sharding collectives run over the "shard" axis only: the all-gather
+# that re-materializes bucket shards, its transpose (psum_scatter) that
+# reduce-scatters grads, and the psum/pmean reductions for clipping and
+# loss logging. Gossip's ppermutes (declared in repro.dist.gossip) stay
+# on the node axes — that separation is what makes MATCHA's per-matching
+# saving and FSDP's 1/S byte saving multiply.
+COLLECTIVE_CONTRACT = {
+    "all_gather": {"axes": ("shard",)},
+    "psum_scatter": {"axes": ("shard",)},
+    "psum": {"axes_subset_of": ("shard", "model")},
+}
+# Fp32-widening accumulation points (see repro.dist.gossip for the rest
+# of the gossip path). Bucket shards themselves are always fp32; the
+# only upcasts here widen logging reductions.
+FP32_UPCAST_SITES = (
+    "consensus_distance_sharded",
+)
+
 
 def _cast_like(tree: PyTree, abs_like: PyTree) -> PyTree:
     """fp32 unravel output -> declared storage dtypes (shapes untouched,

@@ -41,6 +41,24 @@ from repro.kernels import ops
 
 PyTree = Any
 
+# --- static-analysis contract (consumed by repro.analysis.checks) ----------
+# Every collective this module issues, with the mesh axes it may run
+# over. Gossip ppermutes exchange whole replicas (or whole replica
+# shards) between NODES: they run over the node axes only — a ppermute
+# touching "shard" would swap slices *within* a replica and corrupt it.
+COLLECTIVE_CONTRACT = {
+    "ppermute": {"axes": "nodes"},       # resolved to the run's node axes
+}
+# Functions allowed to widen sub-fp32 values to fp32 (the consensus
+# accumulation dtype). The analyzer's dtype lint flags any other fp32
+# upcast traced from this file.
+FP32_UPCAST_SITES = (
+    "leaf",                # mix_dense: fp32-accumulated dense oracle
+    "partner_target",      # mix_matchings / mix_matchings_masked deltas
+    "launch_matchings_masked",
+    "delayed_delta",
+)
+
 
 @dataclasses.dataclass(frozen=True)
 class NodeAxisInfo:

@@ -322,40 +322,9 @@ def test_stream_memory_shapes():
         mesh = make_test_mesh(nodes=4, model=1, shard=2)
         spec = dt.make_spec(mesh, cfg)
 
-        def sub_jaxprs(params):
-            for v in params.values():
-                vs = v if isinstance(v, (list, tuple)) else (v,)
-                for w in vs:
-                    if isinstance(w, jax.core.ClosedJaxpr):
-                        yield w.jaxpr
-                    elif isinstance(w, jax.core.Jaxpr):
-                        yield w
-
-        def max_fp_intermediate(step, args):
-            \"\"\"Largest float intermediate (elements) strictly inside
-            the shard_map manual region, nested jaxprs included.\"\"\"
-            jaxpr = jax.make_jaxpr(step)(*args)
-            best = [0, None]
-            def walk(jx, counting):
-                for eqn in jx.eqns:
-                    is_smap = "shard_map" in str(eqn.primitive)
-                    for sub in sub_jaxprs(eqn.params):
-                        walk(sub, counting or is_smap)
-                    if not counting or is_smap:
-                        continue
-                    for ov in eqn.outvars:
-                        aval = getattr(ov, "aval", None)
-                        if aval is None or not hasattr(aval, "shape"):
-                            continue
-                        if not jnp.issubdtype(aval.dtype, jnp.floating):
-                            continue
-                        n = int(np.prod(aval.shape)) if aval.shape else 1
-                        if n > best[0]:
-                            best[0] = n
-                            best[1] = (str(eqn.primitive), tuple(aval.shape))
-                return best
-            walk(jaxpr.jaxpr, False)
-            return best
+        # largest float intermediate inside the manual region — the
+        # shared static-analysis walker (repro.analysis.traversal)
+        from repro.analysis.traversal import max_fp_intermediate
 
         opt = sgd(0.2, momentum=0.9)
         bits = jnp.zeros((plan.num_matchings,), jnp.float32)
@@ -497,38 +466,8 @@ def test_scan_stream_memory_shapes():
         mesh = make_test_mesh(nodes=4, model=1, shard=2)
         spec = dt.make_spec(mesh, cfg)
 
-        def sub_jaxprs(params):
-            for v in params.values():
-                vs = v if isinstance(v, (list, tuple)) else (v,)
-                for w in vs:
-                    if isinstance(w, jax.core.ClosedJaxpr):
-                        yield w.jaxpr
-                    elif isinstance(w, jax.core.Jaxpr):
-                        yield w
-
-        def max_fp_intermediate(step, args):
-            jaxpr = jax.make_jaxpr(step)(*args)
-            best = [0, None]
-            def walk(jx, counting):
-                for eqn in jx.eqns:
-                    is_smap = "shard_map" in str(eqn.primitive)
-                    for sub in sub_jaxprs(eqn.params):
-                        walk(sub, counting or is_smap)
-                    if not counting or is_smap:
-                        continue
-                    for ov in eqn.outvars:
-                        aval = getattr(ov, "aval", None)
-                        if aval is None or not hasattr(aval, "shape"):
-                            continue
-                        if not jnp.issubdtype(aval.dtype, jnp.floating):
-                            continue
-                        n = int(np.prod(aval.shape)) if aval.shape else 1
-                        if n > best[0]:
-                            best[0] = n
-                            best[1] = (str(eqn.primitive), tuple(aval.shape))
-                return best
-            walk(jaxpr.jaxpr, False)
-            return best
+        # same shared walker as test_stream_memory_shapes
+        from repro.analysis.traversal import max_fp_intermediate
 
         opt = sgd(0.2, momentum=0.9)
         bits = jnp.zeros((plan.num_matchings,), jnp.float32)
