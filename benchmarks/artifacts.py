@@ -14,8 +14,15 @@ RESULTS_DIR = os.path.join("benchmarks", "results")
 
 COMM_TIME_ARTIFACT = os.path.join(RESULTS_DIR, "BENCH_comm_time.json")
 
+SPECTRAL_ARTIFACT = os.path.join(RESULTS_DIR, "spectral_norm_vs_budget.csv")
+
 
 def comm_time_artifact(out_dir: str = RESULTS_DIR) -> str:
     """The comm-time artifact path under ``out_dir`` (callers that
     redirect the results dir still get the canonical file name)."""
     return os.path.join(out_dir, os.path.basename(COMM_TIME_ARTIFACT))
+
+
+def spectral_artifact(out_dir: str = RESULTS_DIR) -> str:
+    """The Fig.-3 spectral-norm CSV path under ``out_dir``."""
+    return os.path.join(out_dir, os.path.basename(SPECTRAL_ARTIFACT))

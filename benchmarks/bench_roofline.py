@@ -8,6 +8,14 @@ Merges, per (arch x shape x mesh):
 
 Emits benchmarks/results/roofline.csv and a markdown table for
 EXPERIMENTS.md SSRoofline.
+
+Also cross-checks the Pallas kernels' per-grid-step VMEM footprints:
+``repro.analysis.pallas_lint`` models each kernel's double-buffered
+block working set, and this bench sweeps the model over every
+registry-reachable kernel shape (``repro.analysis.kernel_cases``),
+asserting each call sits under its ``KERNEL_CONTRACT`` budget and the
+16 MiB hardware VMEM — the same numbers the kernel docstrings quote.
+Emits benchmarks/results/kernel_vmem.csv.
 """
 from __future__ import annotations
 
@@ -70,6 +78,34 @@ def merged_rows(recs: Dict[str, dict]):
     return rows
 
 
+def kernel_vmem_rows():
+    """Per-grid-step VMEM footprint of every registry-reachable kernel
+    call, via the static lint's model (jax imported lazily: the rest of
+    this module stays importable without it). Returns (rows, all_ok)."""
+    import jax
+
+    from repro.analysis import kernel_cases, pallas_lint
+
+    rows = []
+    ok = True
+    for case in kernel_cases.sweep_cases():
+        closed = jax.make_jaxpr(case.fn)(*case.args)
+        for info in pallas_lint.find_pallas_calls(closed):
+            got = pallas_lint.vmem_footprint_bytes(info)
+            limit = int(case.contract["vmem_limit_bytes"])
+            good = got <= limit <= pallas_lint.VMEM_BYTES
+            ok = ok and good
+            rows.append(dict(
+                case=case.label,
+                kernel=case.contract["kernel"],
+                grid="x".join(str(g) for g in info.grid),
+                vmem_bytes=got,
+                vmem_limit_bytes=limit,
+                ok=good,
+            ))
+    return rows, ok
+
+
 def run(out_dir: str = "benchmarks/results"):
     t0 = time.time()
     recs = load_records()
@@ -88,7 +124,19 @@ def run(out_dir: str = "benchmarks/results"):
     mp = [r for r in rows if r["mesh"] == "2x16x16"]
     checks.append((f"single-pod combos compiled: {len(sp)}", len(sp) > 0))
     checks.append((f"multi-pod combos compiled: {len(mp)}", True))
-    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    krows, kok = kernel_vmem_rows()
+    if krows:
+        path = os.path.join(out_dir, "kernel_vmem.csv")
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(krows[0]))
+            w.writeheader()
+            w.writerows(krows)
+    checks.append((
+        f"kernel VMEM model: {len(krows)} registry kernel calls within "
+        "contract budgets",
+        bool(krows) and kok,
+    ))
+    us = (time.time() - t0) * 1e6 / max(len(rows) + len(krows), 1)
     return rows, checks, us
 
 

@@ -24,7 +24,12 @@ committed ``benchmarks/results/BENCH_comm_time.json``) is read *before*
 the benches overwrite the artifact, and after the run every per-(arch, shard)
 byte metric (per-device resident, per-matching gossip, streamed and
 scan-streamed peak transient) must sit within +5% of the baseline or
-the run fails.
+the run fails. When the spectral bench runs under ``--compare``, the
+committed ``spectral_norm_vs_budget.csv`` is likewise read before the
+run and every (graph, CB) rho the fresh run produces must match it
+exactly at the CSV's rounding precision — the planner is deterministic,
+so any drift is a real change to the convergence-factor pipeline and
+must ship with a regenerated artifact.
 
 On exit the aggregator always prints the artifact path and a one-line
 verdict summary, so a red CI job is diagnosable from the log alone.
@@ -37,9 +42,14 @@ import os
 import sys
 import traceback
 
-from benchmarks.artifacts import COMM_TIME_ARTIFACT
+from benchmarks.artifacts import COMM_TIME_ARTIFACT, SPECTRAL_ARTIFACT
 
 SMOKE = ("spectral", "comm_time")
+
+# rho columns gated exactly (at CSV rounding precision) against the
+# committed spectral artifact — the planner is deterministic
+SPECTRAL_FIELDS = ("rho_matcha", "rho_periodic", "rho_vanilla")
+SPECTRAL_TOLERANCE = 5e-5
 
 # (arch, shard)-keyed byte metrics gated against the committed baseline:
 # any of these growing >5% is a memory/communication regression
@@ -141,6 +151,55 @@ def _compare_against_baseline(baseline: dict, fresh_path: str) -> bool:
     return ok
 
 
+def _read_spectral_rows(path: str):
+    import csv
+
+    with open(path, newline="") as f:
+        return {
+            (r["graph"], r["cb"]): r for r in csv.DictReader(f)
+        }
+
+
+def _compare_spectral_csv(baseline_rows: dict, fresh_path: str) -> bool:
+    """Fail if any committed (graph, CB) rho drifted beyond the CSV's
+    rounding precision, or if the fresh run dropped a gated row. The
+    pipeline is deterministic: a mismatch means the planner changed and
+    the artifact was not regenerated alongside it."""
+    fresh_rows = _read_spectral_rows(fresh_path)
+    ok = True
+    compared = 0
+    for key, base in baseline_rows.items():
+        fresh = fresh_rows.get(key)
+        if fresh is None:
+            print(f"  [FAIL] spectral compare: baseline row {key} missing "
+                  "from the fresh CSV", file=sys.stderr)
+            ok = False
+            continue
+        for field in SPECTRAL_FIELDS:
+            if field not in base:
+                continue
+            compared += 1
+            good = (
+                abs(float(fresh[field]) - float(base[field]))
+                <= SPECTRAL_TOLERANCE
+            )
+            ok = ok and good
+            if not good:
+                print(
+                    f"  [FAIL] spectral compare {key} {field}: fresh "
+                    f"{fresh[field]} vs committed {base[field]}",
+                    file=sys.stderr,
+                )
+    if compared == 0:
+        print("  [FAIL] spectral compare: no overlapping rho entries",
+              file=sys.stderr)
+        ok = False
+    else:
+        print(f"  spectral compare: {compared} rho entries gated "
+              f"({'PASS' if ok else 'FAIL'})", file=sys.stderr)
+    return ok
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip", nargs="*", default=[])
@@ -156,11 +215,14 @@ def main() -> None:
         args.only = list(SMOKE)
 
     baseline = None
+    spectral_baseline = None
     if args.compare:
         # read up front: the baseline may be the very file the benches
         # are about to overwrite
         with open(args.compare) as f:
             baseline = json.load(f)
+        if os.path.exists(SPECTRAL_ARTIFACT):
+            spectral_baseline = _read_spectral_rows(SPECTRAL_ARTIFACT)
 
     from benchmarks import (
         bench_comm_time,
@@ -220,6 +282,22 @@ def main() -> None:
             traceback.print_exc()
     elif baseline is not None:
         print("--compare given but comm_time did not run", file=sys.stderr)
+        failed = True
+
+    ran_spectral = (
+        "spectral" not in args.skip
+        and (not args.only or "spectral" in args.only)
+    )
+    if ran_spectral and spectral_baseline is not None:
+        try:
+            if not _compare_spectral_csv(spectral_baseline, SPECTRAL_ARTIFACT):
+                failed = True
+        except Exception:
+            failed = True
+            traceback.print_exc()
+    elif args.compare and ran_spectral:
+        print("--compare given but no committed spectral CSV to gate on",
+              file=sys.stderr)
         failed = True
 
     artifact = (

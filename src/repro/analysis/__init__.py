@@ -25,6 +25,21 @@ traced program against the declared plan:
 ``checks``       the invariant checkers (matching validity, collective
                  axis contract, byte-budget cross-check, memory ladder,
                  dtype lint) producing named ``Violation`` records.
+``pallas_lint``  below the jaxpr: every reachable ``pallas_call`` is
+                 opened and verified against its kernel's declared
+                 ``KERNEL_CONTRACT`` — grid/BlockSpec divisibility,
+                 index-map in-bounds-ness over the full grid, output
+                 write-disjointness, masked-tail guards, accumulator
+                 dtype and a per-grid-step VMEM footprint model — plus
+                 the source-level hardcoded-``interpret=`` lint.
+``kernel_cases`` the registry-driven shape sweep feeding pallas_lint:
+                 one traceable case per kernel per reachable config
+                 shape (aligned and ragged variants).
+``schedule``     above the jaxpr: Theorem 2's convergence condition.
+                 Exact rho = ||E[W'W] - J||_2 over a plan's activation
+                 Bernoullis, period connectivity, sampler-vs-exact
+                 Monte-Carlo agreement, and reproducibility of the
+                 committed spectral-norm CSV.
 ``check``        the CLI: ``python -m repro.analysis.check --preset
                  tiny --shard 2 --all-layouts --strict`` emits a JSON
                  report and exits nonzero on any violation.

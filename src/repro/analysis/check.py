@@ -15,8 +15,18 @@ jaxpr — nothing executes, nothing is allocated — and checks:
 * the memory-ladder bound per layout (traced with gossip "none" — see
   ``checks.check_memory_ladder``),
 * the dtype lint (no f64; dist-layer fp32 upcasts only at declared
-  ``FP32_UPCAST_SITES``).
+  ``FP32_UPCAST_SITES``),
+* below the jaxpr: every pallas_call reachable from the registry's
+  kernel shapes against its ``KERNEL_CONTRACT`` (``--kernel-sweep
+  arch`` lints the selected arch, ``registry`` sweeps all ten,
+  ``none`` skips — see ``repro.analysis.pallas_lint``), plus the
+  hardcoded-``interpret=`` source lint,
+* above the jaxpr: Theorem 2's convergence condition for the plan —
+  exact rho = ||E[W'W] - J||_2 < 1, expectation-graph connectivity,
+  sampler agreement (``repro.analysis.schedule``), and optionally the
+  committed spectral CSV (``--spectral-csv``).
 
+``--skip-steps`` elides the step tracing for kernel/schedule-only runs.
 Emits a JSON report on stdout (progress on stderr). ``--strict`` exits
 1 on any violation — the CI gate.
 """
@@ -64,6 +74,21 @@ def _parse(argv):
     ap.add_argument(
         "--artifact", default=ARTIFACT,
         help="BENCH_comm_time.json to cross-check (skipped if missing)",
+    )
+    ap.add_argument(
+        "--kernel-sweep", default="arch",
+        choices=("arch", "registry", "none"),
+        help="Pallas kernel lint scope: the selected --arch, every "
+        "registry arch, or skip",
+    )
+    ap.add_argument(
+        "--skip-steps", action="store_true",
+        help="skip the step tracing (kernel/schedule checks only)",
+    )
+    ap.add_argument(
+        "--spectral-csv", default="",
+        help="re-derive this committed spectral_norm_vs_budget.csv "
+        "from the planner (skipped when empty)",
     )
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 on any violation (the CI gate)")
@@ -145,6 +170,8 @@ def main(argv=None) -> int:
         "num_matchings": plan.num_matchings,
         "steps": {},
         "plan": {"violations": []},
+        "schedule": {"violations": []},
+        "kernels": {"cases": {}, "interpret_lint": []},
         "artifact": {"path": args.artifact, "row": None, "violations": []},
     }
     all_violations = []
@@ -171,6 +198,65 @@ def main(argv=None) -> int:
         report["plan"]["violations"].append(v.to_json())
         all_violations.append(v)
     planned_pairs = plan.ppermute_pairs()
+
+    # -- schedule verifier: Theorem 2's convergence condition ----------------
+    from repro.analysis import schedule as schedule_checks
+
+    _log("schedule verifier: exact rho / connectivity / sampler")
+    sviols = schedule_checks.check_plan_spectral(plan, where="schedule/plan")
+    sviols += schedule_checks.check_empirical_rho(
+        plan, where="schedule/empirical"
+    )
+    if args.spectral_csv:
+        _log(f"  re-deriving {args.spectral_csv} (deterministic rebuild)")
+        sviols += schedule_checks.check_spectral_csv(
+            args.spectral_csv, where="schedule/csv"
+        )
+    report["schedule"]["violations"] = [v.to_json() for v in sviols]
+    all_violations.extend(sviols)
+    _log(f"  schedule: {len(sviols)} violations")
+
+    # -- kernel lint: below the jaxpr ----------------------------------------
+    if args.kernel_sweep != "none":
+        from repro.analysis import kernel_cases, pallas_lint
+
+        sweep_arch = args.arch if args.kernel_sweep == "arch" else None
+        kcases = kernel_cases.sweep_cases(sweep_arch)
+        _log(f"kernel lint: {len(kcases)} cases ({args.kernel_sweep})")
+        for case in kcases:
+            kviols, stats = pallas_lint.lint_case(case)
+            report["kernels"]["cases"][case.label] = {
+                "stats": stats,
+                "violations": [v.to_json() for v in kviols],
+            }
+            all_violations.extend(kviols)
+        lint = pallas_lint.check_interpret_literals()
+        report["kernels"]["interpret_lint"] = [v.to_json() for v in lint]
+        all_violations.extend(lint)
+        nkv = sum(
+            len(c["violations"]) for c in report["kernels"]["cases"].values()
+        ) + len(lint)
+        _log(f"  kernels: {nkv} violations")
+
+    def emit() -> int:
+        report["num_violations"] = len(all_violations)
+        report["ok"] = not all_violations
+        out = json.dumps(report, indent=2)
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                f.write(out + "\n")
+        print(out)
+        if all_violations:
+            _log(f"FAIL: {len(all_violations)} violations")
+            for v in all_violations[:20]:
+                _log(f"  [{v.name}] {v.where}: {v.detail}")
+            return 1 if args.strict else 0
+        _log("OK: all checks passed")
+        return 0
+
+    if args.skip_steps:
+        return emit()
 
     abs_local = jax.eval_shape(lambda: model.init(jax.random.key(0)))
     bits = jnp.zeros((plan.num_matchings,), jnp.float32)
@@ -380,21 +466,7 @@ def main(argv=None) -> int:
         viols += checks.check_dtypes(closed, where=label)
         record_step(label, closed, records, viols)
 
-    report["num_violations"] = len(all_violations)
-    report["ok"] = not all_violations
-    out = json.dumps(report, indent=2)
-    if args.out:
-        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-        with open(args.out, "w") as f:
-            f.write(out + "\n")
-    print(out)
-    if all_violations:
-        _log(f"FAIL: {len(all_violations)} violations")
-        for v in all_violations[:20]:
-            _log(f"  [{v.name}] {v.where}: {v.detail}")
-        return 1 if args.strict else 0
-    _log("OK: all checks passed")
-    return 0
+    return emit()
 
 
 if __name__ == "__main__":

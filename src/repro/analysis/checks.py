@@ -36,6 +36,43 @@ Violation names are stable API (tests and CI grep for them):
 ``f64-leak``                     any float64 value in the program
 ``fp32-upcast-unwhitelisted``    fp32 widening in the dist layer
                                  outside the declared accumulation sites
+
+Kernel-level names (``repro.analysis.pallas_lint``, verified against
+each kernel's ``KERNEL_CONTRACT``):
+
+``kernel-contract-mismatch``     traced grid/index-map shape disagrees
+                                 with the declared contract
+``block-shape-indivisible``      BlockSpec block does not divide the
+                                 (padded) operand shape
+``index-map-out-of-bounds``      an index map sends some grid point
+                                 outside the operand's block range
+``index-map-not-static``         index map reads a non-grid operand —
+                                 unverifiable statically
+``output-overlap-undeclared``    two grid points write one output block
+                                 without a declared reduction axis
+``masked-tail-guard-missing``    declared ragged tail has no in-kernel
+                                 comparison against its bound
+``masked-tail-guard-dead``       the guard comparison exists but its
+                                 result is never consumed
+``acc-dtype-not-fp32``           scratch accumulator off-contract, or
+                                 bf16/f16 operands never widened
+``vmem-bound-exceeded``          modeled per-grid-step VMEM footprint
+                                 above the contract / 16 MiB budget
+``pallas-call-missing``          a kernel case traced no pallas_call
+``hardcoded-interpret-mode``     literal interpret=True/False outside
+                                 kernels/ops.py (resolve_mode bypass)
+
+Schedule-level names (``repro.analysis.schedule``, Theorem 2):
+
+``expectation-graph-disconnected`` union of matchings with p_j > 0 is
+                                 disconnected (rho >= 1 necessarily)
+``schedule-rho-not-contractive`` exact rho = ||E[W'W] - J||_2 >= 1
+``plan-rho-mismatch``            plan.rho disagrees with the exact
+                                 expectation
+``empirical-rho-mismatch``       sampled-schedule Monte-Carlo rho far
+                                 from the exact expectation
+``spectral-csv-mismatch``        committed spectral_norm_vs_budget.csv
+                                 not reproducible by today's planner
 """
 
 from __future__ import annotations

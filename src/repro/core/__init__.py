@@ -7,7 +7,9 @@ Public API:
     optimize_alpha, spectral_norm_rho            (alpha, paper Lemma 1)
     TopologySchedule + matcha/vanilla/periodic   (topology)
     mixing_matrix, vanilla_equal_weight_matrix   (mixing, paper eq. 5)
+    exact_rho, exact_expected_gram ...           (mixing, paper eq. 86-87)
     plan_matcha / plan_vanilla / plan_periodic   (matcha orchestrator)
+    verify_spectral                              (plan-time Theorem 2 gate)
 """
 from repro.core.alpha import AlphaSolution, optimize_alpha, spectral_norm_rho
 from repro.core.budget import (
@@ -28,15 +30,25 @@ from repro.core.graphs import (
     star_graph,
     torus_graph,
 )
-from repro.core.matcha import MatchaPlan, plan_matcha, plan_periodic, plan_vanilla
+from repro.core.matcha import (
+    MatchaPlan,
+    plan_matcha,
+    plan_periodic,
+    plan_vanilla,
+    verify_spectral,
+)
 from repro.core.matching import (
     matching_decomposition,
     matching_permutation,
     misra_gries_coloring,
 )
 from repro.core.mixing import (
+    analytic_expected_gram,
     check_doubly_stochastic,
     empirical_rho,
+    exact_expected_gram,
+    exact_rho,
+    expectation_support_connected,
     mixing_matrix,
     schedule_mixing_matrix,
     vanilla_equal_weight_matrix,
@@ -54,10 +66,14 @@ __all__ = [
     "Graph",
     "MatchaPlan",
     "TopologySchedule",
+    "analytic_expected_gram",
     "check_doubly_stochastic",
     "complete_graph",
     "empirical_rho",
     "erdos_renyi_graph",
+    "exact_expected_gram",
+    "exact_rho",
+    "expectation_support_connected",
     "expected_laplacians",
     "hypercube_graph",
     "matcha_schedule",
@@ -82,4 +98,5 @@ __all__ = [
     "torus_graph",
     "vanilla_equal_weight_matrix",
     "vanilla_schedule",
+    "verify_spectral",
 ]

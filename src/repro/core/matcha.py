@@ -22,6 +22,7 @@ from repro.core.matching import (
     matching_permutation,
     validate_permutations,
 )
+from repro.core.mixing import exact_rho, expectation_support_connected
 from repro.core.topology import (
     TopologySchedule,
     matcha_schedule,
@@ -81,6 +82,48 @@ class MatchaPlan:
         )
 
 
+def verify_spectral(plan: MatchaPlan, *, rho_tol: float = 1e-6) -> float:
+    """Plan-time gate on Theorem 2's convergence condition.
+
+    Recomputes rho = || E[W'W] - J ||_2 exactly over the plan's
+    independent matching-activation Bernoullis (2^M enumeration for
+    small M, the eq. 86-87 closed form otherwise — both exact) and
+    raises if the plan cannot contract:
+
+    * the expectation graph (union of matchings with p_j > 0) is
+      disconnected — rho >= 1 no matter what alpha is;
+    * the exact rho is >= 1;
+    * ``plan.rho`` disagrees with the exact value by more than
+      ``rho_tol`` — the optimizer's reported rho must be the real one,
+      not an artifact of its parametrization.
+
+    Only valid for plans whose schedule samples matchings independently
+    per iteration (plan_matcha / plan_vanilla). plan_periodic correlates
+    rounds and is gated by its own closed form instead.
+    Returns the exact rho.
+    """
+    laplacians = [sg.laplacian() for sg in plan.matchings]
+    if not expectation_support_connected(laplacians, plan.probabilities):
+        raise ValueError(
+            "expectation graph disconnected: the union of matchings with "
+            "p_j > 0 must be connected for rho < 1 (Theorem 2)"
+        )
+    rho = exact_rho(laplacians, plan.probabilities, plan.alpha)
+    # a unit eigenvalue can round to 1 - O(eps) in eigvalsh; no real
+    # plan sits within 1e-9 of the boundary, so compare with margin
+    if rho >= 1.0 - 1e-9:
+        raise ValueError(
+            f"plan is not contractive: exact rho = {rho:.6f} >= 1 "
+            "(Theorem 2 requires rho < 1)"
+        )
+    if abs(rho - plan.rho) > rho_tol:
+        raise ValueError(
+            f"plan.rho = {plan.rho:.8f} disagrees with the exact "
+            f"E[W'W] spectral norm {rho:.8f} (tol {rho_tol:g})"
+        )
+    return rho
+
+
 def plan_matcha(
     graph: Graph,
     comm_budget: float,
@@ -98,7 +141,7 @@ def plan_matcha(
     L_bar, L_tilde = expected_laplacians(matchings, sol.probabilities)
     asol: AlphaSolution = optimize_alpha(L_bar, L_tilde)
     perms = np.stack([matching_permutation(sg) for sg in matchings])
-    return MatchaPlan(
+    plan = MatchaPlan(
         graph=graph,
         matchings=tuple(matchings),
         permutations=perms,
@@ -108,6 +151,8 @@ def plan_matcha(
         lambda2=sol.lambda2,
         comm_budget=comm_budget,
     )
+    verify_spectral(plan)
+    return plan
 
 
 def plan_vanilla(graph: Graph) -> MatchaPlan:
@@ -118,7 +163,7 @@ def plan_vanilla(graph: Graph) -> MatchaPlan:
     asol = optimize_alpha(L_bar, L_tilde)
     perms = np.stack([matching_permutation(sg) for sg in matchings])
     lam = np.linalg.eigvalsh(L_bar)
-    return MatchaPlan(
+    plan = MatchaPlan(
         graph=graph,
         matchings=tuple(matchings),
         permutations=perms,
@@ -128,6 +173,8 @@ def plan_vanilla(graph: Graph) -> MatchaPlan:
         lambda2=float(lam[1]),
         comm_budget=1.0,
     )
+    verify_spectral(plan)
+    return plan
 
 
 def plan_periodic(

@@ -53,3 +53,106 @@ def empirical_rho(
     acc /= len(Ws)
     J = np.full((m, m), 1.0 / m)
     return float(np.max(np.abs(np.linalg.eigvalsh(acc - J))))
+
+
+# ---------------------------------------------------------------------------
+# Exact E[W'W] over the matching-activation Bernoullis (paper eq. 86-87)
+# ---------------------------------------------------------------------------
+def analytic_expected_gram(
+    L_bar: np.ndarray, L_tilde: np.ndarray, alpha: float
+) -> np.ndarray:
+    """E[W'W] = (I - alpha L_bar)^2 + 2 alpha^2 L_tilde (paper eq. 86-87).
+
+    Exact, not an approximation: the activations B_j ~ Bernoulli(p_j)
+    are independent, B_j^2 = B_j, and a matching Laplacian satisfies
+    L_j^2 = 2 L_j (each edge block is 2x its own projector), which
+    collapses the quadratic E[(sum_j B_j L_j)^2] to the L_bar / L_tilde
+    form. Valid ONLY for independent activations — periodic schedules
+    correlate rounds and must not use this.
+    """
+    m = L_bar.shape[0]
+    W_bar = np.eye(m) - alpha * L_bar
+    return W_bar @ W_bar + 2.0 * alpha**2 * L_tilde
+
+
+def exact_expected_gram(
+    laplacians: Sequence[np.ndarray],
+    probabilities: np.ndarray,
+    alpha: float,
+    *,
+    max_enumerate: int = 12,
+) -> np.ndarray:
+    """E[W'W] by direct enumeration of all 2^M activation patterns.
+
+    For M <= ``max_enumerate`` matchings this sums W_S' W_S * P(S) over
+    every activation subset S — the definition of the expectation, with
+    no algebraic identities in the way. Above that it falls back to
+    :func:`analytic_expected_gram`, which is equal (not approximate) for
+    independent Bernoulli activations; the enumeration path exists to
+    cross-validate that identity, not to replace it.
+    """
+    p = np.asarray(probabilities, dtype=float)
+    M = len(laplacians)
+    if M != p.shape[0]:
+        raise ValueError("probabilities must align with laplacians")
+    if np.any(p < -1e-12) or np.any(p > 1 + 1e-12):
+        raise ValueError("activation probabilities must lie in [0, 1]")
+    m = laplacians[0].shape[0]
+    if M > max_enumerate:
+        L_bar = sum(pj * Lj for pj, Lj in zip(p, laplacians))
+        L_tilde = sum(pj * (1 - pj) * Lj for pj, Lj in zip(p, laplacians))
+        return analytic_expected_gram(L_bar, L_tilde, alpha)
+    acc = np.zeros((m, m))
+    eye = np.eye(m)
+    for bits in range(1 << M):
+        prob = 1.0
+        L = np.zeros((m, m))
+        for j in range(M):
+            if bits >> j & 1:
+                prob *= p[j]
+                L = L + laplacians[j]
+            else:
+                prob *= 1.0 - p[j]
+        if prob == 0.0:
+            continue
+        W = eye - alpha * L
+        acc += prob * (W.T @ W)
+    return acc
+
+
+def exact_rho(
+    laplacians: Sequence[np.ndarray],
+    probabilities: np.ndarray,
+    alpha: float,
+    *,
+    max_enumerate: int = 12,
+) -> float:
+    """Exact rho = || E[W'W] - J ||_2 for independent matching
+    activations (Theorem 2's convergence contraction factor)."""
+    m = laplacians[0].shape[0]
+    gram = exact_expected_gram(
+        laplacians, probabilities, alpha, max_enumerate=max_enumerate
+    )
+    J = np.full((m, m), 1.0 / m)
+    return float(np.max(np.abs(np.linalg.eigvalsh(gram - J))))
+
+
+def expectation_support_connected(
+    laplacians: Sequence[np.ndarray],
+    probabilities: np.ndarray,
+    *,
+    tol: float = 1e-9,
+) -> bool:
+    """Is the union of matchings with p_j > 0 a connected graph?
+
+    Necessary for rho < 1: if the expectation graph is disconnected,
+    E[W'W] - J has a second unit eigenvalue (one indicator vector per
+    component) and the consensus error cannot contract.
+    """
+    p = np.asarray(probabilities, dtype=float)
+    L = sum(
+        (Lj for pj, Lj in zip(p, laplacians) if pj > tol),
+        start=np.zeros_like(laplacians[0]),
+    )
+    lam = np.linalg.eigvalsh(L)
+    return bool(lam[1] > tol)

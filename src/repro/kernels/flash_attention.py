@@ -16,7 +16,8 @@ causal attention that's ~half the tiles, for sliding windows all tiles
 beyond the window diagonal band.
 
 TARGET: TPU. Validated on CPU via interpret=True against
-``repro.kernels.ref.attention_ref``.
+``repro.kernels.ref.attention_ref``; the execution mode is resolved by
+``repro.kernels.ops.resolve_mode`` and threaded in (no default here).
 """
 from __future__ import annotations
 
@@ -29,6 +30,51 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -2.0**30
+
+# Online-softmax running stats and the output accumulator. bf16/f16
+# inputs MUST accumulate in fp32 (repro.analysis.pallas_lint enforces
+# this against the contract below).
+ACC_DTYPE = jnp.float32
+
+# Declared kernel semantics, verified statically by
+# ``repro.analysis.pallas_lint`` (the kernel-level analogue of the dist
+# modules' COLLECTIVE_CONTRACT):
+#   grid            axis names, in pallas_call grid order
+#   reduction_axes  grid axes whose steps revisit (accumulate into) the
+#                   same output block — the only legal write overlap
+#   masked          logical tail-masked operand axes -> the guard: the
+#                   in-kernel iota comparison against this compile-time
+#                   length constant ("kv_len" kwarg)
+#   vmem_limit_bytes  ceiling on the double-buffered per-grid-step VMEM
+#                   working set for every reachable shape
+KERNEL_CONTRACT = dict(
+    kernel="flash_attention",
+    grid=("batch", "q_head", "q_block", "k_block"),
+    reduction_axes=(3,),
+    masked={"kv": "kv_len"},
+    acc_dtype="float32",
+    vmem_limit_bytes=4 * 2**20,
+)
+
+
+# Index maps are module-level named functions (not inline lambdas) so
+# the static analyzer's mutation tests can patch them; the pallas_call
+# below resolves them from module globals at trace time.
+def q_index_map(b, h, iq, ik):
+    return (b, h, iq, 0)
+
+
+def kv_index_map(group):
+    """GQA: query head h reads kv head h // group."""
+
+    def index_map(b, h, iq, ik):
+        return (b, h // group, ik, 0)
+
+    return index_map
+
+
+def o_index_map(b, h, iq, ik):
+    return (b, h, iq, 0)
 
 
 def _flash_kernel(
@@ -121,7 +167,7 @@ def flash_attention(
     kv_len: int = 0,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool,
 ) -> jax.Array:
     """``kv_len > 0`` marks keys/values at positions >= kv_len as
     padding to be masked out (callers that pad Sk up to a block
@@ -157,16 +203,16 @@ def flash_attention(
         kernel,
         grid=(B, Hq, nq, nk),
         in_specs=[
-            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h // group, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_q, hd), q_index_map),
+            pl.BlockSpec((1, 1, block_k, hd), kv_index_map(group)),
+            pl.BlockSpec((1, 1, block_k, hd), kv_index_map(group)),
         ],
-        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), o_index_map),
         out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, hd), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((block_q, 1), jnp.float32),
-            pltpu.VMEM((block_q, 1), jnp.float32),
-            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, 1), ACC_DTYPE),
+            pltpu.VMEM((block_q, 1), ACC_DTYPE),
+            pltpu.VMEM((block_q, hd), ACC_DTYPE),
         ],
         interpret=interpret,
     )(qh, kh, vh)

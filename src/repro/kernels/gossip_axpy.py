@@ -14,7 +14,9 @@ MATCHA computes it once, before training (paper Lemma 1).
 Blocks: flattened (rows, 1024)-tiles, 8x128-aligned, fp32 accumulate.
 
 TARGET: TPU. Validated on CPU via interpret=True against
-``repro.kernels.ref.gossip_axpy_ref``.
+``repro.kernels.ref.gossip_axpy_ref``; the execution mode is resolved
+by ``repro.kernels.ops.resolve_mode`` and threaded in (no default
+here).
 """
 from __future__ import annotations
 
@@ -27,15 +29,36 @@ from jax.experimental import pallas as pl
 LANE = 1024          # 8 sublanes x 128 lanes per block row
 BLOCK_ROWS = 256     # 256 x 1024 x 4B x 3 buffers = 3 MB VMEM working set
 
+# The elementwise update runs in fp32 regardless of the storage dtype
+# (bf16 shards would otherwise lose consensus mass to rounding).
+ACC_DTYPE = jnp.float32
+
+# See flash_attention.KERNEL_CONTRACT for the field semantics. No
+# masked axes: the wrapper zero-pads, x + alpha*(0 - 0) = 0 preserves
+# the pad, and the tail is sliced off after the call — value-neutral by
+# construction, no in-kernel guard needed.
+KERNEL_CONTRACT = dict(
+    kernel="gossip_axpy",
+    grid=("row_block",),
+    reduction_axes=(),
+    masked={},
+    acc_dtype="float32",
+    vmem_limit_bytes=8 * 2**20,
+)
+
+
+def row_index_map(i):
+    return (i, 0)
+
 
 def _axpy_kernel(x_ref, y_ref, o_ref, *, alpha: float):
-    x = x_ref[...].astype(jnp.float32)
-    y = y_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(ACC_DTYPE)
+    y = y_ref[...].astype(ACC_DTYPE)
     o_ref[...] = (x + alpha * (y - x)).astype(o_ref.dtype)
 
 
 def gossip_axpy(
-    x: jax.Array, y: jax.Array, alpha: float, *, interpret: bool = True
+    x: jax.Array, y: jax.Array, alpha: float, *, interpret: bool
 ) -> jax.Array:
     """Elementwise consensus update over arbitrary-shaped params."""
     if x.shape != y.shape:
@@ -58,10 +81,10 @@ def gossip_axpy(
         functools.partial(_axpy_kernel, alpha=float(alpha)),
         grid=(grid_rows,),
         in_specs=[
-            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), row_index_map),
+            pl.BlockSpec((block_rows, LANE), row_index_map),
         ],
-        out_specs=pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((block_rows, LANE), row_index_map),
         out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
         interpret=interpret,
     )(xf, yf)

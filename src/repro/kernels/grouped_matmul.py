@@ -16,7 +16,9 @@ Group offsets arrive via scalar prefetch (SMEM).
 All matmul dims are MXU-aligned (bm = bn = 128 defaults).
 
 TARGET: TPU. Validated on CPU via interpret=True against
-``repro.kernels.ref.grouped_matmul_ref`` (= lax.ragged_dot).
+``repro.kernels.ref.grouped_matmul_ref`` (= lax.ragged_dot); the
+execution mode is resolved by ``repro.kernels.ops.resolve_mode`` and
+threaded in (no default here).
 """
 from __future__ import annotations
 
@@ -26,6 +28,35 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# The per-block partial products accumulate in fp32 scratch across the
+# sequential group axis regardless of the operand dtype.
+ACC_DTYPE = jnp.float32
+
+# See flash_attention.KERNEL_CONTRACT for the field semantics. The row
+# tail (M padded up to block_m) is masked by the scalar-prefetched
+# group offsets: rows outside [offsets[g], offsets[g+1]) are zeroed
+# before the matmul, and pad rows beyond M belong to no group.
+KERNEL_CONTRACT = dict(
+    kernel="grouped_matmul",
+    grid=("row_block", "col_block", "group"),
+    reduction_axes=(2,),
+    masked={"rows": "scalar_prefetch"},
+    acc_dtype="float32",
+    vmem_limit_bytes=12 * 2**20,
+)
+
+
+def x_index_map(im, jn, g, offs):
+    return (im, 0)
+
+
+def w_index_map(im, jn, g, offs):
+    return (g, 0, jn)
+
+
+def o_index_map(im, jn, g, offs):
+    return (im, jn)
 
 
 def _gmm_kernel(
@@ -55,11 +86,11 @@ def _gmm_kernel(
             jnp.int32, (block_m, 1), 0
         )
         hit = jnp.logical_and(rows >= start, rows < end)     # (bm, 1)
-        x = jnp.where(hit, x_ref[...].astype(jnp.float32), 0.0)
-        w = w_ref[0].astype(jnp.float32)                     # (K, bn)
+        x = jnp.where(hit, x_ref[...].astype(ACC_DTYPE), 0.0)
+        w = w_ref[0].astype(ACC_DTYPE)                       # (K, bn)
         acc_ref[...] += jax.lax.dot_general(
             x, w, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
+            preferred_element_type=ACC_DTYPE,
         )
 
     @pl.when(g == num_groups - 1)
@@ -74,7 +105,7 @@ def grouped_matmul(
     *,
     block_m: int = 128,
     block_n: int = 128,
-    interpret: bool = True,
+    interpret: bool,
 ) -> jax.Array:
     M, K = x.shape
     G, _, N = w.shape
@@ -94,11 +125,11 @@ def grouped_matmul(
         num_scalar_prefetch=1,
         grid=(Mp // bm, Np // bn, G),
         in_specs=[
-            pl.BlockSpec((bm, K), lambda im, jn, g, offs: (im, 0)),
-            pl.BlockSpec((1, K, bn), lambda im, jn, g, offs: (g, 0, jn)),
+            pl.BlockSpec((bm, K), x_index_map),
+            pl.BlockSpec((1, K, bn), w_index_map),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda im, jn, g, offs: (im, jn)),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        out_specs=pl.BlockSpec((bm, bn), o_index_map),
+        scratch_shapes=[pltpu.VMEM((bm, bn), ACC_DTYPE)],
     )
     out = pl.pallas_call(
         kernel,

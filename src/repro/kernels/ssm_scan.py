@@ -15,7 +15,8 @@ chunk=128, P=64..128, N=128 the working set is ~0.4 MB fp32, VMEM-safe.
 The (chunk, chunk) intra-chunk matrix and both matmuls are MXU-shaped.
 
 TARGET: TPU. Validated on CPU via interpret=True against
-``repro.kernels.ref.ssm_scan_ref``.
+``repro.kernels.ref.ssm_scan_ref``; the execution mode is resolved by
+``repro.kernels.ops.resolve_mode`` and threaded in (no default here).
 """
 from __future__ import annotations
 
@@ -25,6 +26,50 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# The (N, P) recurrent state carried across chunks lives in fp32
+# scratch regardless of the operand dtype (the exponential decays
+# underflow in bf16 long before the recurrence converges).
+ACC_DTYPE = jnp.float32
+
+# See flash_attention.KERNEL_CONTRACT for the field semantics. No
+# masked axes: this kernel *requires* S % chunk == 0 (the ops wrapper
+# halves the chunk until it divides) — an indivisible tail here is a
+# hard lint violation, not a maskable one. The final-state output is
+# written once on the last chunk of the sequential chunk axis, so that
+# axis is its declared reduction axis.
+KERNEL_CONTRACT = dict(
+    kernel="ssm_scan",
+    grid=("batch", "head", "chunk"),
+    reduction_axes=(2,),
+    masked={},
+    acc_dtype="float32",
+    vmem_limit_bytes=4 * 2**20,
+)
+
+
+def x_index_map(b, h, c):
+    return (b, c, h, 0)
+
+
+def dt_index_map(b, h, c):
+    return (b, c, h)
+
+
+def a_index_map(b, h, c):
+    return (h,)
+
+
+def bc_index_map(b, h, c):
+    return (b, c, 0)
+
+
+def y_index_map(b, h, c):
+    return (b, c, h, 0)
+
+
+def hout_index_map(b, h, c):
+    return (b, h, 0, 0)
 
 
 def _ssd_kernel(
@@ -95,7 +140,7 @@ def ssm_scan(
     C_mat: jax.Array,    # (B, S, N)
     *,
     chunk: int = 128,
-    interpret: bool = True,
+    interpret: bool,
 ):
     """Returns (y (B,S,H,P), final_state (B,H,N,P))."""
     B, S, H, P = x.shape
@@ -110,21 +155,21 @@ def ssm_scan(
         kernel,
         grid=(B, H, nc),
         in_specs=[
-            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
-            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
-            pl.BlockSpec((1,), lambda b, h, c: (h,)),
-            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
-            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, 1, P), x_index_map),
+            pl.BlockSpec((1, chunk, 1), dt_index_map),
+            pl.BlockSpec((1,), a_index_map),
+            pl.BlockSpec((1, chunk, N), bc_index_map),
+            pl.BlockSpec((1, chunk, N), bc_index_map),
         ],
         out_specs=[
-            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
-            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((1, chunk, 1, P), y_index_map),
+            pl.BlockSpec((1, 1, N, P), hout_index_map),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
-            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, N, P), ACC_DTYPE),
         ],
-        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((N, P), ACC_DTYPE)],
         interpret=interpret,
     )(x, dt, A, B_mat, C_mat)
     return y, hout

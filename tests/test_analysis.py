@@ -315,20 +315,33 @@ def test_unwhitelisted_dist_layer_upcast_is_flagged():
 # ---------------------------------------------------------------------------
 def _run_gate(mutation: str, cli: str) -> str:
     """Run ``repro.analysis.check --strict`` in-process after applying a
-    mutation to the dist layer; print rc + violation names."""
+    mutation to the dist/kernel/planner layer; print rc + the violation
+    names from every report section (steps, plan, schedule, kernels)."""
     return run_sub("""
         import json, sys
         import jax, jax.numpy as jnp
+        import numpy as np
         from repro.analysis import check
+        from repro.core import matcha as mc
+        from repro.core.budget import BudgetSolution
         from repro.dist import fsdp, gossip
+        from repro.kernels import flash_attention as fa
+        from repro.kernels import gossip_axpy as ga
 """ + mutation + """
         import contextlib, io
         buf = io.StringIO()
         with contextlib.redirect_stdout(buf):
             rc = check.main(""" + cli + """)
         report = json.loads(buf.getvalue())
-        names = sorted({v["name"] for s in report["steps"].values()
-                        for v in s["violations"]})
+        viols = [v for s in report["steps"].values()
+                 for v in s["violations"]]
+        viols += report["plan"]["violations"]
+        viols += report["schedule"]["violations"]
+        viols += report["artifact"]["violations"]
+        viols += [v for c in report["kernels"]["cases"].values()
+                  for v in c["violations"]]
+        viols += report["kernels"]["interpret_lint"]
+        names = sorted({v["name"] for v in viols})
         print("rc:", rc)
         print("violations:", names)
     """)
@@ -383,5 +396,90 @@ def test_gate_passes_unmutated_subset():
         '["--shard", "2", "--layouts", "streamed",'
         ' "--gossip-modes", "none", "--strict"]',
     )
+    assert "rc: 0" in out, out
+    assert "violations: []" in out, out
+
+
+# ---------------------------------------------------------------------------
+# Mutation tests: the kernel-lint / schedule-verifier gate
+# ---------------------------------------------------------------------------
+def test_gate_fails_on_shifted_kernel_index_map():
+    """Shift flash attention's q index map one block off-grid: the last
+    grid step now reads past the array, and the kernel lint must catch
+    it (the kernel resolves its index maps from module globals at trace
+    time, so the patch reaches the traced pallas_call)."""
+    out = _run_gate(
+        """
+        fa.q_index_map = lambda b, h, iq, ik: (b, h, iq + 1, 0)
+""",
+        '["--skip-steps", "--strict"]',
+    )
+    assert "rc: 1" in out, out
+    assert "index-map-out-of-bounds" in out, out
+
+
+def test_gate_fails_on_removed_masked_tail_guard():
+    """Drop the kv_len mask from the ragged attention path: the padded
+    key positions are no longer guarded in the kernel body and the
+    masked-tail check must flag the declared guard as missing."""
+    out = _run_gate(
+        """
+        _orig_fa = fa.flash_attention
+        def _unmasked(*a, **kw):
+            kw["kv_len"] = 0
+            return _orig_fa(*a, **kw)
+        fa.flash_attention = _unmasked
+""",
+        '["--skip-steps", "--strict"]',
+    )
+    assert "rc: 1" in out, out
+    assert "masked-tail-guard-missing" in out, out
+
+
+def test_gate_fails_on_bf16_accumulator():
+    """Demote the gossip-axpy accumulation dtype to bf16: the ragged
+    bf16 shard case now runs the consensus update without the fp32
+    widening its contract requires, and the strict gate must exit 1."""
+    out = _run_gate(
+        """
+        ga.ACC_DTYPE = jnp.bfloat16
+""",
+        '["--skip-steps", "--strict"]',
+    )
+    assert "rc: 1" in out, out
+    assert "acc-dtype-not-fp32" in out, out
+
+
+def test_gate_fails_on_non_contractive_plan():
+    """Degenerate the budget optimizer so only matching 0 ever activates
+    (disconnected expectation graph -> rho >= 1), and stub out the
+    planner's own verify_spectral so the plan actually builds: the
+    schedule verifier in analysis.check is the independent backstop and
+    must still fail the gate."""
+    out = _run_gate(
+        """
+        mc.verify_spectral = lambda plan, **kw: plan.rho
+        _orig_opt = mc.optimize_activation_probabilities
+        def _degenerate(matchings, comm_budget, **kw):
+            sol = _orig_opt(matchings, comm_budget, **kw)
+            p = np.zeros_like(sol.probabilities)
+            p[0] = 1.0
+            return BudgetSolution(
+                probabilities=p, lambda2=sol.lambda2,
+                budget=sol.budget, iterations=sol.iterations,
+            )
+        mc.optimize_activation_probabilities = _degenerate
+""",
+        '["--skip-steps", "--kernel-sweep", "none", "--strict"]',
+    )
+    assert "rc: 1" in out, out
+    assert "expectation-graph-disconnected" in out, out
+    assert "schedule-rho-not-contractive" in out, out
+
+
+def test_gate_passes_unmutated_kernel_and_schedule():
+    """Control for the kernel/schedule mutations: the same --skip-steps
+    invocation on the unmutated tree exits 0 with zero violations."""
+    out = _run_gate("", '["--skip-steps", "--strict"]')
     assert "rc: 0" in out, out
     assert "violations: []" in out, out

@@ -177,6 +177,69 @@ def test_gossip_update_tree():
 
 
 # ---------------------------------------------------------------------------
+# impl resolution (ops.resolve_mode): the ONE dispatch decision point
+# ---------------------------------------------------------------------------
+def test_resolve_mode_auto_and_passthrough():
+    assert jax.default_backend() != "tpu"   # this container is CPU-only
+    # "auto" resolves per backend: reference path for model wrappers,
+    # interpreted kernel for the gossip hot path
+    assert ops.resolve_mode("auto") == "xla"
+    assert ops.resolve_mode("auto", off_tpu="interpret") == "interpret"
+    # explicit modes pass through unchanged (including "pallas", which
+    # now means the compiled kernel even off-TPU)
+    for mode in ops.MODES:
+        assert ops.resolve_mode(mode) == mode
+
+
+def test_resolve_mode_rejects_unknown_impl():
+    for bad in ("fused", "", "Pallas", "interp"):
+        with pytest.raises(ValueError, match="unknown impl"):
+            ops.resolve_mode(bad)
+
+
+# ---------------------------------------------------------------------------
+# wrapper-level tail parity: interpret vs reference on ragged shapes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("M", [37, 165])
+def test_grouped_matmul_wrapper_tail_parity(M):
+    """Row counts that don't divide the block: the interpreted kernel
+    and the jnp reference must agree through the public wrapper."""
+    ks = jax.random.split(jax.random.key(M), 2)
+    G, K, N = 4, 32, 48
+    x = jax.random.normal(ks[0], (M, K))
+    w = jax.random.normal(ks[1], (G, K, N)) * 0.2
+    rng = np.random.default_rng(M)
+    cuts = np.sort(rng.choice(M, G - 1, replace=False))
+    sizes = jnp.asarray(
+        np.diff(np.concatenate([[0], cuts, [M]])), jnp.int32
+    )
+    got = ops.grouped_matmul(x, w, sizes, impl="interpret")
+    want = ops.grouped_matmul(x, w, sizes, impl="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("S", [100, 52])
+def test_ssd_wrapper_tail_parity(S):
+    """Sequence lengths that don't divide the chunk: ops.ssd halves the
+    chunk until it divides; kernel output must still match the
+    reference scan."""
+    ks = jax.random.split(jax.random.key(S), 5)
+    B, H, P, N = 2, 2, 16, 8
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.uniform(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, N)) * 0.3
+    y, h = ops.ssd(x, dt, A, Bm, Cm, chunk=64, impl="interpret")
+    y_ref, h_ref = ops.ssd(x, dt, A, Bm, Cm, chunk=64, impl="xla")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
 # grouped matmul (megablox-lite)
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -1,0 +1,216 @@
+"""Unit tests for the kernel-level lint (``repro.analysis.pallas_lint``).
+
+Synthetic pallas_calls exercise each checker's failure mode directly
+(the mutation tests in tests/test_analysis.py cover the CLI gate on the
+real kernels); a real registry sweep pins the shipped kernels clean.
+"""
+import textwrap
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.analysis import kernel_cases, pallas_lint
+
+CONTRACT = dict(
+    kernel="synthetic",
+    grid=("m",),
+    reduction_axes=(),
+    masked={},
+    acc_dtype="float32",
+    vmem_limit_bytes=2**20,
+)
+
+
+def _names(viols):
+    return [v.name for v in viols]
+
+
+def _info(fn, *args):
+    closed = jax.make_jaxpr(fn)(*args)
+    infos = pallas_lint.find_pallas_calls(closed)
+    assert len(infos) == 1
+    return infos[0]
+
+
+def _double(in_map, out_map, shape=(32, 128), block=(8, 128), grid=(4,),
+            dtype=jnp.float32, kernel=None):
+    """One-input one-output pallas_call with the given index maps."""
+    if kernel is None:
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...] + x_ref[...]
+
+    def fn(x):
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[pl.BlockSpec(block, in_map)],
+            out_specs=pl.BlockSpec(block, out_map),
+            out_shape=jax.ShapeDtypeStruct(shape, dtype),
+            interpret=True,
+        )(x)
+
+    return fn, (jax.ShapeDtypeStruct(shape, dtype),)
+
+
+IDENT = lambda i: (i, 0)                                      # noqa: E731
+
+
+# ---------------------------------------------------------------------------
+# individual checkers on synthetic kernels
+# ---------------------------------------------------------------------------
+def test_clean_synthetic_kernel_passes_every_check():
+    fn, args = _double(IDENT, IDENT)
+    info = _info(fn, *args)
+    assert pallas_lint.lint_pallas_eqn(info, CONTRACT, {}, "t") == []
+
+
+def test_index_map_out_of_bounds_is_flagged():
+    fn, args = _double(lambda i: (i + 1, 0), IDENT)
+    info = _info(fn, *args)
+    names = _names(pallas_lint.check_index_maps(info, "t"))
+    assert "index-map-out-of-bounds" in names
+
+
+def test_output_overlap_needs_declared_reduction_axis():
+    # every grid point writes output block (0, 0)
+    fn, args = _double(IDENT, lambda i: (0, 0))
+    info = _info(fn, *args)
+    names = _names(pallas_lint.check_write_disjointness(info, CONTRACT, "t"))
+    assert names == ["output-overlap-undeclared"]
+    # the same overlap is legal once axis 0 is declared a reduction axis
+    red = dict(CONTRACT, reduction_axes=(0,))
+    assert pallas_lint.check_write_disjointness(info, red, "t") == []
+
+
+def test_block_indivisible_is_flagged():
+    fn, args = _double(IDENT, IDENT, shape=(30, 128))
+    info = _info(fn, *args)
+    names = _names(pallas_lint.check_block_divisibility(info, "t"))
+    assert "block-shape-indivisible" in names
+
+
+def test_grid_arity_mismatch_is_flagged():
+    fn, args = _double(IDENT, IDENT)
+    info = _info(fn, *args)
+    two_axis = dict(CONTRACT, grid=("m", "n"))
+    names = _names(pallas_lint.check_contract_shape(info, two_axis, "t"))
+    assert names == ["kernel-contract-mismatch"]
+
+
+def test_vmem_budget_is_enforced():
+    fn, args = _double(IDENT, IDENT)
+    info = _info(fn, *args)
+    # 2 * (in + out) * 8*128*4 B = 16 KiB modeled footprint
+    assert pallas_lint.vmem_footprint_bytes(info) == 4 * 8 * 128 * 4
+    tiny = dict(CONTRACT, vmem_limit_bytes=1024)
+    names = _names(pallas_lint.check_vmem(info, tiny, "t"))
+    assert names == ["vmem-bound-exceeded"]
+    assert pallas_lint.check_vmem(info, CONTRACT, "t") == []
+
+
+def test_bf16_without_widening_is_flagged():
+    def raw(x_ref, o_ref):
+        o_ref[...] = x_ref[...] + x_ref[...]
+
+    fn, args = _double(IDENT, IDENT, dtype=jnp.bfloat16, kernel=raw)
+    info = _info(fn, *args)
+    names = _names(pallas_lint.check_acc_dtype(info, CONTRACT, "t"))
+    assert names == ["acc-dtype-not-fp32"]
+
+    def widened(x_ref, o_ref):
+        acc = x_ref[...].astype(jnp.float32)
+        o_ref[...] = (acc + acc).astype(jnp.bfloat16)
+
+    fn, args = _double(IDENT, IDENT, dtype=jnp.bfloat16, kernel=widened)
+    info = _info(fn, *args)
+    assert pallas_lint.check_acc_dtype(info, CONTRACT, "t") == []
+
+
+def test_masked_tail_guard_live_dead_missing():
+    masked = dict(CONTRACT, masked={"kv": "bound"})
+    guards = {"kv": 100}
+
+    def guarded(x_ref, o_ref):
+        pos = jax.lax.broadcasted_iota(jnp.int32, (8, 128), 1)
+        live = pos < 100
+        o_ref[...] = jnp.where(live, x_ref[...], 0.0)
+
+    fn, args = _double(IDENT, IDENT, kernel=guarded)
+    info = _info(fn, *args)
+    assert pallas_lint.check_masked_tails(info, masked, guards, "t") == []
+
+    def dead(x_ref, o_ref):
+        pos = jax.lax.broadcasted_iota(jnp.int32, (8, 128), 1)
+        _ = pos < 100
+        o_ref[...] = x_ref[...]
+
+    fn, args = _double(IDENT, IDENT, kernel=dead)
+    info = _info(fn, *args)
+    names = _names(pallas_lint.check_masked_tails(info, masked, guards, "t"))
+    assert names == ["masked-tail-guard-dead"]
+
+    def unguarded(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    fn, args = _double(IDENT, IDENT, kernel=unguarded)
+    info = _info(fn, *args)
+    names = _names(pallas_lint.check_masked_tails(info, masked, guards, "t"))
+    assert names == ["masked-tail-guard-missing"]
+
+    # a guard for an axis the contract never declared masked
+    names = _names(pallas_lint.check_masked_tails(
+        info, CONTRACT, {"kv": 100}, "t"))
+    assert names == ["kernel-contract-mismatch"]
+
+
+# ---------------------------------------------------------------------------
+# case-level entry points on the real kernels
+# ---------------------------------------------------------------------------
+def test_registry_sweep_one_arch_is_clean():
+    cases = kernel_cases.sweep_cases("internlm2_1_8b")
+    assert len(cases) >= 4   # shared gossip + attention aligned/ragged
+    for case in cases:
+        viols, stats = pallas_lint.lint_case(case)
+        assert viols == [], (case.label, _names(viols))
+        assert stats and all(
+            s["vmem_footprint_bytes"] <= s["vmem_limit_bytes"]
+            for s in stats
+        ), case.label
+
+
+def test_reference_fallback_is_pallas_call_missing():
+    case = kernel_cases.KernelCase(
+        label="t/fallback",
+        fn=lambda x: x * 2,
+        args=(jax.ShapeDtypeStruct((8, 8), jnp.float32),),
+        contract=CONTRACT,
+        guards={},
+    )
+    viols, stats = pallas_lint.lint_case(case)
+    assert _names(viols) == ["pallas-call-missing"]
+    assert stats == []
+
+
+# ---------------------------------------------------------------------------
+# source lint: hardcoded interpret=
+# ---------------------------------------------------------------------------
+def test_interpret_literal_lint_flags_only_outside_ops(tmp_path):
+    (tmp_path / "kernels").mkdir()
+    (tmp_path / "kernels" / "ops.py").write_text(
+        "def f(k):\n    return k(interpret=True)\n"
+    )
+    (tmp_path / "rogue.py").write_text(textwrap.dedent(
+        '''
+        """Docstring mentioning interpret=True must not trip the lint."""
+        def g(k):
+            return k(x=1, interpret=False)
+        '''
+    ))
+    viols = pallas_lint.check_interpret_literals(str(tmp_path))
+    assert _names(viols) == ["hardcoded-interpret-mode"]
+    assert "rogue.py" in viols[0].detail
+
+
+def test_shipped_tree_has_no_hardcoded_interpret():
+    assert pallas_lint.check_interpret_literals() == []

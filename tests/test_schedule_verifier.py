@@ -1,0 +1,189 @@
+"""Theorem-2 schedule verifier: exact rho, plan gate, analysis checks.
+
+Covers the pure-numpy layer (``repro.core.mixing`` exact expectation,
+``repro.core.matcha.verify_spectral``) and the reporting layer
+(``repro.analysis.schedule``); the CLI gate on a mutated planner is in
+tests/test_analysis.py.
+"""
+import dataclasses
+import types
+
+import numpy as np
+import pytest
+
+from repro.analysis import schedule as sched_checks
+from repro.core import (
+    analytic_expected_gram,
+    exact_expected_gram,
+    exact_rho,
+    expectation_support_connected,
+    plan_matcha,
+    ring_graph,
+    verify_spectral,
+)
+from repro.core.budget import expected_laplacians
+from repro.core.matching import matching_decomposition
+
+
+def _laplacians(graph):
+    return [sg.laplacian() for sg in matching_decomposition(graph)]
+
+
+def _names(viols):
+    return sorted(v.name for v in viols)
+
+
+# ---------------------------------------------------------------------------
+# exact expectation: enumeration == closed form (paper eq. 86-87)
+# ---------------------------------------------------------------------------
+def test_enumeration_matches_analytic_identity():
+    """2^M enumeration and the L_bar/L_tilde closed form must agree to
+    machine precision — the identity is exact for independent Bernoulli
+    activations over matching Laplacians, not an approximation."""
+    Ls = _laplacians(ring_graph(6))
+    rng = np.random.default_rng(0)
+    p = rng.uniform(0.1, 0.9, size=len(Ls))
+    alpha = 0.4
+    enum = exact_expected_gram(Ls, p, alpha)
+    L_bar, L_tilde = expected_laplacians(
+        matching_decomposition(ring_graph(6)), p
+    )
+    closed = analytic_expected_gram(L_bar, L_tilde, alpha)
+    np.testing.assert_allclose(enum, closed, atol=1e-12)
+    # forcing the fallback path returns the same gram
+    fallback = exact_expected_gram(Ls, p, alpha, max_enumerate=0)
+    np.testing.assert_allclose(enum, fallback, atol=1e-12)
+
+
+def test_exact_expected_gram_validates_inputs():
+    Ls = _laplacians(ring_graph(4))
+    with pytest.raises(ValueError, match="align"):
+        exact_expected_gram(Ls, np.ones(len(Ls) + 1), 0.3)
+    with pytest.raises(ValueError, match="\\[0, 1\\]"):
+        exact_expected_gram(Ls, np.full(len(Ls), 1.5), 0.3)
+
+
+def test_expectation_support_connectivity():
+    Ls = _laplacians(ring_graph(4))
+    assert expectation_support_connected(Ls, np.ones(len(Ls)))
+    # only one matching active: the union cannot span the ring
+    p = np.zeros(len(Ls))
+    p[0] = 1.0
+    assert not expectation_support_connected(Ls, p)
+
+
+# ---------------------------------------------------------------------------
+# plan-time gate (repro.core.matcha.verify_spectral)
+# ---------------------------------------------------------------------------
+def test_plan_rho_is_the_exact_expectation_norm():
+    plan = plan_matcha(ring_graph(4), 0.5, budget_steps=100)
+    ex = exact_rho(
+        [sg.laplacian() for sg in plan.matchings],
+        plan.probabilities, plan.alpha,
+    )
+    assert abs(ex - plan.rho) <= 1e-6
+    assert ex < 1.0
+    assert verify_spectral(plan) == pytest.approx(ex)
+
+
+def test_verify_spectral_raises_on_disconnected_expectation():
+    plan = plan_matcha(ring_graph(4), 0.5, budget_steps=100)
+    p = np.zeros_like(plan.probabilities)
+    p[0] = 1.0
+    bad = dataclasses.replace(plan, probabilities=p)
+    with pytest.raises(ValueError, match="disconnected"):
+        verify_spectral(bad)
+
+
+def test_verify_spectral_raises_on_misreported_rho():
+    plan = plan_matcha(ring_graph(4), 0.5, budget_steps=100)
+    lying = dataclasses.replace(plan, rho=plan.rho * 0.5)
+    with pytest.raises(ValueError, match="disagrees"):
+        verify_spectral(lying)
+
+
+# ---------------------------------------------------------------------------
+# reporting layer (repro.analysis.schedule)
+# ---------------------------------------------------------------------------
+def test_check_plan_spectral_clean_and_adversarial():
+    plan = plan_matcha(ring_graph(4), 0.5, budget_steps=100)
+    assert sched_checks.check_plan_spectral(plan) == []
+    p = np.zeros_like(plan.probabilities)
+    p[0] = 1.0
+    bad = dataclasses.replace(plan, probabilities=p)
+    names = _names(sched_checks.check_plan_spectral(bad))
+    assert "expectation-graph-disconnected" in names
+    assert "schedule-rho-not-contractive" in names
+
+
+def test_check_empirical_rho_catches_a_broken_sampler():
+    plan = plan_matcha(ring_graph(4), 0.5, budget_steps=100)
+    assert sched_checks.check_empirical_rho(plan) == []
+
+    class _NeverGossip:
+        """A sampler that activates nothing: W = I every round, so the
+        empirical rho is exactly 1 while the plan's exact rho is ~0.5."""
+
+        def laplacian(self, k):
+            return np.zeros((plan.graph.m, plan.graph.m))
+
+    broken = types.SimpleNamespace(
+        matchings=plan.matchings,
+        probabilities=plan.probabilities,
+        alpha=plan.alpha,
+        schedule=lambda n, seed=0: _NeverGossip(),
+    )
+    names = _names(sched_checks.check_empirical_rho(
+        broken, num_iterations=200))
+    assert names == ["empirical-rho-mismatch"]
+
+
+def test_check_spectral_csv_missing_empty_and_tampered(tmp_path):
+    missing = tmp_path / "absent.csv"
+    assert _names(sched_checks.check_spectral_csv(str(missing))) == [
+        "spectral-csv-mismatch"
+    ]
+
+    empty = tmp_path / "empty.csv"
+    empty.write_text("graph,cb,rho_matcha,rho_periodic,rho_vanilla\n")
+    assert _names(sched_checks.check_spectral_csv(str(empty))) == [
+        "spectral-csv-mismatch"
+    ]
+
+    unknown = tmp_path / "unknown.csv"
+    unknown.write_text(
+        "graph,cb,rho_matcha,rho_periodic,rho_vanilla\n"
+        "mystery_graph,0.5,0.5,0.9,0.4\n"
+    )
+    assert _names(sched_checks.check_spectral_csv(str(unknown))) == [
+        "spectral-csv-mismatch"
+    ]
+
+
+def test_check_spectral_csv_rederives_a_committed_row(tmp_path):
+    """One genuine row from the committed artifact re-derives clean;
+    nudging its rho_matcha past the rounding tolerance is flagged."""
+    import csv
+
+    with open(sched_checks.SPECTRAL_CSV, newline="") as f:
+        rows = [r for r in csv.DictReader(f) if r["graph"] == "paper8_fig1"]
+    assert rows, "committed spectral CSV lost its paper8 rows"
+    row = rows[0]
+
+    def write(path, r):
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(r))
+            w.writeheader()
+            w.writerow(r)
+
+    genuine = tmp_path / "one_row.csv"
+    write(genuine, row)
+    assert sched_checks.check_spectral_csv(str(genuine)) == []
+
+    drifted = dict(row)
+    drifted["rho_matcha"] = f"{float(row['rho_matcha']) + 0.01:.5f}"
+    tampered = tmp_path / "tampered.csv"
+    write(tampered, drifted)
+    assert _names(sched_checks.check_spectral_csv(str(tampered))) == [
+        "spectral-csv-mismatch"
+    ]
