@@ -26,3 +26,14 @@ def comm_time_artifact(out_dir: str = RESULTS_DIR) -> str:
 def spectral_artifact(out_dir: str = RESULTS_DIR) -> str:
     """The Fig.-3 spectral-norm CSV path under ``out_dir``."""
     return os.path.join(out_dir, os.path.basename(SPECTRAL_ARTIFACT))
+
+
+# repro.telemetry trace emitted by bench_comm_time's measured worker
+# (events.jsonl + trace.json) — the CI bench-smoke job uploads this
+# directory as a build artifact
+TRACE_DIR = os.path.join(RESULTS_DIR, "trace")
+
+
+def trace_dir(out_dir: str = RESULTS_DIR) -> str:
+    """The measured-bench trace directory under ``out_dir``."""
+    return os.path.join(out_dir, os.path.basename(TRACE_DIR))

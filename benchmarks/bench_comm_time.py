@@ -14,6 +14,22 @@ pays ``max(comm(k), compute)`` — the exchange hides behind the next
 step's fwd/bwd. Both are reported per comm budget and the full result
 set lands in ``BENCH_comm_time.json`` (the CI smoke artifact).
 
+Measured section (``repro.telemetry``): alongside the analytic model,
+``run()`` spawns a worker subprocess (the 8-device CPU mesh needs
+XLA_FLAGS set before jax init, like ``bench_convergence``) that trains
+the smoke model for a few fenced steps in the sequential AND overlap
+strategies and probes each matching's ppermute as its own fenced
+executable. The artifact gains a ``measured`` object
+(``measured_step_ms`` per strategy, expected ``measured_comm_ms``, and
+per-matching mean/p50/p95), ``step_time_overlap.csv`` gains measured
+columns next to the modeled units, and a tolerant cross-check asserts
+the measured sequential/overlap ratio is directionally consistent with
+the model. Measured numbers are machine-dependent wall-clock: they are
+NOT gated by ``--compare`` (only the byte metrics are) and the
+directional check carries a generous tolerance. The worker's trace
+lands in ``benchmarks/results/trace/`` (the CI bench-smoke upload).
+Disable with ``--no-measured`` / ``run(measured=False)``.
+
 FSDP composition: the sharded-replica mode (``repro.dist.fsdp``) keeps
 1/S of every fp32 bucket per device and gossips the shards directly, so
 per-device param bytes AND per-matching gossip bytes both shrink by the
@@ -36,14 +52,23 @@ from __future__ import annotations
 import csv
 import json
 import os
+import subprocess
+import sys
 import time
 
 import numpy as np
 
-from benchmarks.artifacts import RESULTS_DIR, comm_time_artifact
+from benchmarks.artifacts import RESULTS_DIR, comm_time_artifact, trace_dir
 from repro.core import paper_figure1_graph, plan_matcha, plan_vanilla
 
 COMPUTE_UNITS = 1.0      # the paper's linear delay model: 1 unit of compute
+
+MEASURED_CB = 0.5        # the comm budget the measured section runs at
+MEASURED_STEPS = 8       # fenced steps per strategy (after 2 warmup)
+# Directional-consistency tolerance: the model says overlap <= sequential
+# per step; measured CPU wall-clock is noisy and the CPU backend hides
+# little latency, so only a large inversion fails the check.
+MEASURED_RATIO_SLACK = 1.25
 
 
 def step_time_model(plan, *, steps: int = 2000, seed: int = 0) -> dict:
@@ -87,6 +112,129 @@ def fsdp_bytes_table(
     )
 
 
+def measured_section(
+    out_dir: str, *, steps: int = MEASURED_STEPS, cb: float = MEASURED_CB
+) -> dict:
+    """Run the measured worker in a subprocess (the 8-device CPU mesh
+    needs XLA_FLAGS before jax init; this process may already hold a
+    1-device jax). Returns the worker's ``measured`` payload."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env.setdefault("PYTHONPATH", "src")
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_comm_time",
+         "--worker", "--steps", str(steps), "--cb", str(cb),
+         "--out", out_dir],
+        capture_output=True, text=True, env=env, timeout=1800,
+    )
+    if res.returncode != 0:
+        raise RuntimeError(
+            f"measured comm-time worker failed:\n{res.stderr[-3000:]}"
+        )
+    return json.loads(res.stdout.splitlines()[-1])
+
+
+def _measured_worker(out_dir: str, steps: int, cb: float) -> dict:
+    """Measured per-strategy step times + per-matching probes on the
+    smoke model (runs on the worker's 8-device mesh; prints JSON)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.registry import get_smoke_config
+    from repro.data.pipeline import DecentralizedBatches
+    from repro.dist import decen_train as dt
+    from repro.dist import sharding as shd
+    from repro.models.transformer import Model
+    from repro.optim.optimizers import sgd
+    from repro.telemetry import StepTimer, TraceRecorder
+    from repro.telemetry.probes import measure_matchings, summarize_ms
+
+    warmup = 2
+    g = paper_figure1_graph()
+    cfg = get_smoke_config("internlm2_1_8b")
+    model = Model(cfg)
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    spec = dt.make_spec(mesh, cfg, multi_pod=False)
+    plan = plan_matcha(g, cb, budget_steps=800)
+    sched = plan.schedule(steps + warmup, seed=1)
+    recorder = TraceRecorder(
+        meta=dict(bench="comm_time", arch=cfg.name, cb=cb, steps=steps)
+    )
+    timer = StepTimer(recorder)
+
+    abs_local = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    elems = int(sum(
+        np.prod(l.shape) for l in jax.tree.leaves(abs_local)
+    ))
+    out = dict(cb=cb, steps=steps, nodes=8, arch=cfg.name)
+    with jax.set_mesh(mesh):
+        pm = measure_matchings(
+            plan, spec, per_node_elements=elems, timer=timer, iters=5
+        )
+        out["per_matching"] = [
+            {k: round(v, 4) if isinstance(v, float) else v
+             for k, v in r.items()}
+            for r in pm
+        ]
+        # expected measured comm per iteration: each matching's measured
+        # mean weighted by its activation probability (the measured
+        # analogue of the model's expected_comm units)
+        probs = np.asarray(plan.probabilities, dtype=np.float64)
+        out["measured_comm_ms"] = round(float(sum(
+            probs[r["matching"]] * r["mean_ms"] for r in pm
+        )), 4)
+
+        for mode, label in (("masked", "sequential"), ("overlap", "overlap")):
+            opt = sgd(0.1, momentum=0.9)
+            params = dt.init_stacked_params(model, spec, seed=0)
+            opt_state = dt.init_stacked_opt_state(opt, model, spec)
+            pspecs = dt.stacked_param_shardings(model, spec)
+            params = jax.device_put(params, shd.named_shardings(pspecs, mesh))
+            data = DecentralizedBatches(cfg, 8, 4, 64, seed=0)
+            it = iter(data)
+            gstate = None
+            if mode == "overlap":
+                bplan = dt.param_bucket_plan(model)
+                gstate = dt.init_gossip_state(plan, spec, bplan)
+                step = dt.make_train_step(
+                    model, opt, plan, spec, gossip_mode=mode,
+                    bucket_plan=bplan,
+                )
+            else:
+                step = dt.make_train_step(
+                    model, opt, plan, spec, gossip_mode=mode
+                )
+            samples = []
+            for k in range(steps + warmup):
+                bits = jnp.asarray(sched.activations[k].astype(np.float32))
+                batch = next(it)
+                t0 = time.perf_counter()
+                with timer.phase("step", cat="step", step=k,
+                                 mode=label) as sp:
+                    if mode == "overlap":
+                        params, opt_state, gstate, losses, _ = step(
+                            params, opt_state, gstate, batch, bits
+                        )
+                    else:
+                        params, opt_state, losses, _ = step(
+                            params, opt_state, batch, bits
+                        )
+                    sp.fence((params, losses))
+                if k >= warmup:        # first steps pay compilation
+                    samples.append((time.perf_counter() - t0) * 1e3)
+            s = summarize_ms(samples)
+            out[label] = dict(
+                measured_step_ms=round(s["mean_ms"], 4),
+                p50_ms=round(s["p50_ms"], 4),
+                p95_ms=round(s["p95_ms"], 4),
+                n=s["n"],
+            )
+    jsonl_path, chrome_path = recorder.flush(trace_dir(out_dir))
+    out["trace"] = dict(events=jsonl_path, chrome=chrome_path,
+                        num_events=len(recorder.events()))
+    return out
+
+
 def per_node_comm_time(plan) -> np.ndarray:
     """Expected units each node spends communicating per iteration:
     sum over matchings containing the node of p_j (one unit each)."""
@@ -100,7 +248,11 @@ def per_node_comm_time(plan) -> np.ndarray:
     return out
 
 
-def run(out_dir: str = RESULTS_DIR):
+def run(out_dir: str = RESULTS_DIR, measured: bool | None = None):
+    """Full bench. ``measured=False`` skips the wall-clock worker
+    subprocess (the analytic model and byte tables still run)."""
+    if measured is None:
+        measured = True
     t0 = time.time()
     g = paper_figure1_graph()
     van = plan_vanilla(g)
@@ -133,6 +285,25 @@ def run(out_dir: str = RESULTS_DIR):
     for cb, mp in plans.items():
         st = step_time_model(mp)
         step_rows.append(dict(cb=cb, **{k: round(v, 4) for k, v in st.items()}))
+
+    # measured wall-clock next to the modeled units (worker subprocess;
+    # fills only the row at MEASURED_CB — measuring every budget would
+    # recompile two strategies per row for no additional signal)
+    meas = measured_section(out_dir) if measured else None
+    measured_cols = (
+        "measured_step_sequential_ms", "measured_step_overlap_ms",
+        "measured_comm_ms",
+    )
+    for r in step_rows:
+        if meas is not None and r["cb"] == meas["cb"]:
+            r["measured_step_sequential_ms"] = (
+                meas["sequential"]["measured_step_ms"])
+            r["measured_step_overlap_ms"] = (
+                meas["overlap"]["measured_step_ms"])
+            r["measured_comm_ms"] = meas["measured_comm_ms"]
+        else:
+            for c in measured_cols:
+                r[c] = ""
     with open(os.path.join(out_dir, "step_time_overlap.csv"), "w",
               newline="") as f:
         w = csv.DictWriter(f, fieldnames=list(step_rows[0]))
@@ -212,15 +383,37 @@ def run(out_dir: str = RESULTS_DIR):
                 r["peak_transient_bytes_scan_streamed"]
                 == r["peak_transient_bytes_streamed"],
             ))
+    # measured cross-checks: directional consistency only — wall-clock
+    # magnitudes are machine-dependent and stay out of the --compare gate
+    if meas is not None:
+        seq_ms = meas["sequential"]["measured_step_ms"]
+        ovl_ms = meas["overlap"]["measured_step_ms"]
+        checks.append((
+            f"measured CB={meas['cb']}: overlap {ovl_ms:.1f} ms <= "
+            f"sequential {seq_ms:.1f} ms x {MEASURED_RATIO_SLACK}",
+            ovl_ms <= seq_ms * MEASURED_RATIO_SLACK,
+        ))
+        n_match = len(plans[meas["cb"]].matchings)
+        checks.append((
+            f"measured: probed all {n_match} matchings",
+            len(meas["per_matching"]) == n_match,
+        ))
+        checks.append((
+            f"measured: expected comm {meas['measured_comm_ms']:.2f} ms > 0",
+            meas["measured_comm_ms"] > 0,
+        ))
     us = (time.time() - t0) * 1e6 / max(len(rows), 1)
 
-    # machine-readable artifact for the CI benchmarks smoke job
+    # machine-readable artifact for the CI benchmarks smoke job; the
+    # measured object is additive — the --compare gate only reads the
+    # byte metrics (REGRESSION_FIELDS in benchmarks/run.py)
     with open(comm_time_artifact(out_dir), "w") as f:
         json.dump(
             dict(
                 per_node=rows,
                 step_time=step_rows,
                 fsdp=fsdp_rows,
+                measured=meas,
                 checks=[dict(name=n, ok=bool(ok)) for n, ok in checks],
             ),
             f, indent=2,
@@ -228,7 +421,29 @@ def run(out_dir: str = RESULTS_DIR):
     return rows, checks, us
 
 
+def build_parser():
+    """CLI: the default invocation runs the full bench; ``--worker`` is
+    the measured subprocess body (spawned by :func:`measured_section`,
+    not for direct use)."""
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-measured", action="store_true",
+                    help="skip the measured wall-clock worker")
+    ap.add_argument("--worker", action="store_true",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--steps", type=int, default=MEASURED_STEPS)
+    ap.add_argument("--cb", type=float, default=MEASURED_CB)
+    ap.add_argument("--out", default=RESULTS_DIR)
+    return ap
+
+
 if __name__ == "__main__":
-    _, checks, _ = run()
-    for name, ok in checks:
-        print(("PASS " if ok else "FAIL ") + name)
+    args = build_parser().parse_args()
+    if args.worker:
+        payload = _measured_worker(args.out, args.steps, args.cb)
+        print(json.dumps(payload))
+    else:
+        _, checks, _ = run(out_dir=args.out, measured=not args.no_measured)
+        for name, ok in checks:
+            print(("PASS " if ok else "FAIL ") + name)

@@ -10,6 +10,13 @@ Claims validated:
   * MATCHA CB=0.5 tracks vanilla's loss-vs-epoch curve (Fig 4 d-f);
   * at equal budget MATCHA's final loss <= P-DecenSGD's (Fig 6);
   * MATCHA reaches vanilla's final loss in less simulated time.
+
+``convergence.csv`` also carries a measured ``wall_s`` column (fenced
+per-step wall-clock, compilation step excluded) so time-to-loss can be
+plotted on a real clock next to the simulated delay-model axis; the
+measured values are reported but not gated — on the masked runtime all
+matchings are traced regardless of budget, so CPU wall-clock barely
+separates the budgets.
 """
 from __future__ import annotations
 
@@ -91,23 +98,27 @@ def _worker(out_dir: str, steps: int):
         pspecs = dt.stacked_param_shardings(model, spec)
         data = DecentralizedBatches(cfg, 8, 4, 64, seed=0)
         it = iter(data)
-        sim_time, hist = 0.0, []
+        sim_time, wall_s, hist = 0.0, 0.0, []
         with jax.set_mesh(mesh):
             params = jax.device_put(params, shd.named_shardings(pspecs, mesh))
             step = dt.make_train_step(model, opt, plan, spec,
                                       gossip_mode="masked", grad_clip=1.0)
             for k in range(steps):
                 bits = jnp.asarray(sched.activations[k].astype(np.float32))
+                t0 = time.perf_counter()
                 params, opt_state, losses, _ = step(
                     params, opt_state, next(it), bits
                 )
+                jax.block_until_ready(losses)
+                if k > 0:      # step 0 pays compilation — keep it off the
+                    wall_s += time.perf_counter() - t0      # measured axis
                 sim_time += sched.comm_units(k) + COMPUTE_UNITS
                 if k % 5 == 0 or k == steps - 1:
-                    hist.append((k, float(jnp.mean(losses)), sim_time))
+                    hist.append((k, float(jnp.mean(losses)), sim_time, wall_s))
         curves[label] = hist
-        for k, loss_k, st in hist:
+        for k, loss_k, st, ws in hist:
             rows.append(dict(run=label, step=k, loss=round(loss_k, 5),
-                             sim_time=round(st, 1)))
+                             sim_time=round(st, 1), wall_s=round(ws, 3)))
 
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "convergence.csv"), "w", newline="") as f:
@@ -118,10 +129,13 @@ def _worker(out_dir: str, steps: int):
     def final_loss(label):
         return curves[label][-1][1]
 
-    def time_to_loss(label, target):
-        for k, loss_k, st in curves[label]:
-            if loss_k <= target:
-                return st
+    def time_to_loss(label, target, axis=2):
+        """First history value on the given time axis (2 = simulated
+        units, 3 = measured wall-clock seconds) at which the run's loss
+        reaches ``target``."""
+        for point in curves[label]:
+            if point[1] <= target:
+                return point[axis]
         return float("inf")
 
     checks = []
@@ -146,17 +160,33 @@ def _worker(out_dir: str, steps: int):
         f"{t_v:.0f}u",
         t_m <= t_v,
     ))
+    # (d) measured wall-clock axis (informational: on the masked runtime
+    # every matching is traced regardless of budget, so per-step
+    # wall-clock barely varies with CB — the curve is emitted for the
+    # time-to-loss plot, only its existence is asserted)
+    t_mw = time_to_loss("matcha@0.25", tgt, axis=3)
+    checks.append((
+        f"measured: matcha@0.25 reaches vanilla-final loss in {t_mw:.1f}s "
+        f"wall-clock (vanilla {time_to_loss('vanilla', tgt, axis=3):.1f}s)",
+        bool(np.isfinite(t_mw)),
+    ))
     return rows, checks
 
 
-if __name__ == "__main__":
+def build_parser():
+    """CLI: ``--worker`` is the 8-device subprocess body spawned by
+    :func:`run` (not for direct use)."""
     import argparse
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--worker", action="store_true")
     ap.add_argument("--steps", type=int, default=120)
     ap.add_argument("--out", default="benchmarks/results")
-    args = ap.parse_args()
+    return ap
+
+
+if __name__ == "__main__":
+    args = build_parser().parse_args()
     if args.worker:
         rows, checks = _worker(args.out, args.steps)
         print(json.dumps({"rows": rows, "checks": checks,

@@ -18,6 +18,11 @@ place that path is defined: ``benchmarks.artifacts``) and ``--smoke``
 additionally re-reads the artifact to assert the fsdp sharded config
 shrank per-device param bytes by the shard factor and that the
 streamed peak-transient bytes sit below the monolithic gather.
+comm_time also spawns a measured wall-clock worker (``repro.telemetry``
+fenced timers; skip it with ``--no-measured``) whose trace lands in
+``benchmarks/results/trace/`` — the CI bench-smoke job uploads that
+directory. Measured wall-clock numbers are never gated by ``--compare``;
+only the byte metrics below are.
 
 ``--compare BASELINE`` is the regression gate: the baseline JSON (the
 committed ``benchmarks/results/BENCH_comm_time.json``) is read *before*
@@ -200,7 +205,10 @@ def _compare_spectral_csv(baseline_rows: dict, fresh_path: str) -> bool:
     return ok
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
+    """The aggregator's CLI. Separate from :func:`main` so tooling
+    (``repro.analysis.docs_lint``) can verify documented flags against
+    the real parser without running any bench."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip", nargs="*", default=[])
     ap.add_argument("--only", nargs="*", default=[])
@@ -210,7 +218,14 @@ def main() -> None:
                     help="baseline BENCH_comm_time.json: fail if a gated "
                          "byte metric regressed >5% (read before the run "
                          "overwrites the artifact)")
-    args = ap.parse_args()
+    ap.add_argument("--no-measured", action="store_true",
+                    help="skip comm_time's measured wall-clock worker "
+                         "subprocess (the analytic model still runs)")
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
     if args.smoke and not args.only:
         args.only = list(SMOKE)
 
@@ -233,7 +248,8 @@ def main() -> None:
 
     benches = {
         "spectral": bench_spectral.run,
-        "comm_time": bench_comm_time.run,
+        "comm_time": lambda: bench_comm_time.run(
+            measured=not args.no_measured),
         "convergence": bench_convergence.run,
         "roofline": bench_roofline.run,
     }

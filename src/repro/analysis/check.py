@@ -44,7 +44,10 @@ LAYOUTS = ("monolithic", "streamed", "scan_streamed")
 ARTIFACT = os.path.join("benchmarks", "results", "BENCH_comm_time.json")
 
 
-def _parse(argv):
+def build_parser() -> argparse.ArgumentParser:
+    """The checker's CLI. Separate from :func:`_parse` so tooling
+    (``repro.analysis.docs_lint``) can verify documented flags against
+    the real parser without importing jax."""
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.check", description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter,
@@ -94,6 +97,11 @@ def _parse(argv):
                     help="exit 1 on any violation (the CI gate)")
     ap.add_argument("--out", default="",
                     help="also write the JSON report to this path")
+    return ap
+
+
+def _parse(argv):
+    ap = build_parser()
     args = ap.parse_args(argv)
     if args.all_layouts:
         args.layouts = ",".join(LAYOUTS)

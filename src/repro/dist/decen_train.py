@@ -82,8 +82,12 @@ def make_spec(
     multi_pod: bool = False,
     sequence_parallel: bool = False,
 ) -> DistSpec:
-    # Single authority for the node count; raises on a pod-axis mesh
-    # with multi_pod=False (which would silently gossip per-pod only).
+    """Resolve ``mesh`` + config into the runtime's `DistSpec`: node
+    count and axes, shard factor, and the train-time sharding rules.
+
+    Delegates to ``sharding.num_nodes`` — the single authority for the
+    node count — which raises on a pod-axis mesh with
+    ``multi_pod=False`` (that would silently gossip per-pod only)."""
     num = shd.num_nodes(mesh, multi_pod=multi_pod)
     rules = shd.train_rules(
         mesh, cfg, multi_pod=multi_pod, sequence_parallel=sequence_parallel
@@ -116,12 +120,18 @@ def init_stacked_params(model, spec: DistSpec, seed: int = 0) -> PyTree:
 
 
 def init_stacked_opt_state(opt: Optimizer, model, spec: DistSpec) -> PyTree:
+    """Zero-initialized optimizer state per node: every param-shaped
+    slot gains the leading ``(num_nodes,)`` dim (fp32, like the
+    replicated params it mirrors)."""
     abs_local = jax.eval_shape(lambda: model.init(jax.random.key(0)))
     zeros_local = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), abs_local)
     return _stack(opt.init(zeros_local), spec.num_nodes)
 
 
 def stacked_param_shardings(model, spec: DistSpec) -> PyTree:
+    """Per-parameter PartitionSpecs for the stacked tree: the leading
+    node dim over the node axes, the per-node dims per the model's
+    logical axes (tensor-parallel where the rules map them)."""
     base = shd.param_pspecs(model.logical_axes(), spec.rules)
     nodes = spec.nodes_axis
     return jax.tree.map(
@@ -345,13 +355,16 @@ def make_train_step(
 
     def sgd_half(p, s, batch):
         b = jax.tree.map(lambda a: a[0], batch)
-        (loss, metrics), grads = jax.value_and_grad(
-            model.loss, has_aux=True
-        )(p, b)
-        if grad_clip:
-            grads = clip_by_global_norm(grads, grad_clip)
-        updates, s = opt.update(grads, s, p)
-        return apply_updates(p, updates), s, loss, metrics
+        with jax.named_scope("fwd_bwd"):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True
+            )(p, b)
+            if grad_clip:
+                grads = clip_by_global_norm(grads, grad_clip)
+        with jax.named_scope("optimizer"):
+            updates, s = opt.update(grads, s, p)
+            p = apply_updates(p, updates)
+        return p, s, loss, metrics
 
     expand = lambda t: jax.tree.map(lambda a: a[None], t)
 
@@ -360,24 +373,29 @@ def make_train_step(
         p = jax.tree.map(lambda a: a[0], params)
         s = jax.tree.map(lambda a: a[0], opt_state)
         p, s, loss, metrics = sgd_half(p, s, batch)
-        if gossip_mode == "masked":
-            p = mix_matchings_masked(p, alpha, perms, bits, info)
-        elif gossip_mode == "static":
-            p = mix_matchings(p, alpha, perms, active, info)
+        with jax.named_scope("gossip"):
+            if gossip_mode == "masked":
+                p = mix_matchings_masked(p, alpha, perms, bits, info)
+            elif gossip_mode == "static":
+                p = mix_matchings(p, alpha, perms, active, info)
         return expand(p), expand(s), loss[None], expand(metrics)
 
     def body_overlap(params, opt_state, gstate, batch, bits):
         p = jax.tree.map(lambda a: a[0], params)
         s = jax.tree.map(lambda a: a[0], opt_state)
         # 1. land the delayed correction from the in-flight exchange
-        p = _apply_delayed(p, tuple(a[0] for a in gstate.delta), bplan, alpha)
+        with jax.named_scope("gossip_apply"):
+            p = _apply_delayed(
+                p, tuple(a[0] for a in gstate.delta), bplan, alpha
+            )
         # 2. launch this iteration's exchange on the corrected params;
         #    the grads below don't consume it, so the collectives (and
         #    the elementwise combine into the carried delta) overlap the
         #    fwd/bwd
-        sent = bucketing.ravel(bplan, p)
-        recv = launch_matchings_masked(sent, bits, perms, info)
-        new_delta = delayed_delta(sent, recv, bits)
+        with jax.named_scope("gossip_launch"):
+            sent = bucketing.ravel(bplan, p)
+            recv = launch_matchings_masked(sent, bits, perms, info)
+            new_delta = delayed_delta(sent, recv, bits)
         # 3. local SGD on the corrected params
         p, s, loss, metrics = sgd_half(p, s, batch)
         new_state = GossipState(delta=tuple(a[None] for a in new_delta))
@@ -404,3 +422,133 @@ def make_train_step(
         axis_names=set(spec.node_axes),
     )
     return jax.jit(stepped)
+
+
+# ---------------------------------------------------------------------------
+# Phased train step (telemetry)
+# ---------------------------------------------------------------------------
+def make_phased_train_step(
+    model,
+    opt: Optimizer,
+    plan,
+    spec: DistSpec,
+    *,
+    timer=None,
+    gossip_mode: str = "masked",
+    active: Sequence[int] = (),
+    grad_clip: float = 0.0,
+):
+    """Telemetry variant of :func:`make_train_step`: the same update,
+    split into separately jitted + fenced phase executables so a host
+    clock can attribute wall time per runtime phase.
+
+    Same call signature and semantics as the fused step for
+    ``gossip_mode`` in ("masked", "static", "none")::
+
+        params, opt_state, losses, metrics = step(params, opt_state,
+                                                  batch, bits, step=k)
+
+    but executed as three fenced executables — ``fwd_bwd`` (grads +
+    clip), ``optimizer`` (update + apply), ``gossip`` (the matching
+    exchange; absent for "none") — each wrapped in a ``timer``
+    span (``repro.telemetry.StepTimer``; ``None`` times without
+    recording). After each call ``step.last_phase_ms`` holds the
+    phase-name → milliseconds dict of that call.
+
+    The phase boundaries are real fences: per-phase numbers cost
+    dispatch serialization and one extra grads round-trip, so this
+    builder is only used when ``--trace`` is on. ``overlap`` mode is
+    deliberately unsupported — fencing its phases would serialize the
+    very collective/compute overlap being measured; overlap runs get
+    whole-step timing plus per-matching probes instead
+    (``docs/observability.md``).
+    """
+    from repro.telemetry.timers import StepTimer
+
+    if gossip_mode == "sequential":
+        gossip_mode = "masked"
+    if gossip_mode not in ("masked", "static", "none"):
+        raise ValueError(
+            "make_phased_train_step supports gossip_mode in "
+            f"('masked', 'static', 'none'); got {gossip_mode!r} "
+            "(overlap runs are timed whole-step: fencing phases would "
+            "serialize the overlap being measured)"
+        )
+    _reject_shard_mesh(spec, "make_phased_train_step")
+    timer = timer or StepTimer()
+    info = spec.node_info
+    nodes_ax = spec.nodes_axis
+    mesh = spec.mesh
+    perms = np.asarray(plan.permutations)
+    alpha = float(plan.alpha)
+    active = tuple(int(j) for j in active)
+    expand = lambda t: jax.tree.map(lambda a: a[None], t)
+    manual = set(spec.node_axes)
+
+    def fwd_bwd_body(params, batch):
+        p = jax.tree.map(lambda a: a[0], params)
+        b = jax.tree.map(lambda a: a[0], batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True
+        )(p, b)
+        if grad_clip:
+            grads = clip_by_global_norm(grads, grad_clip)
+        return expand(grads), loss[None], expand(metrics)
+
+    def opt_body(params, opt_state, grads):
+        p = jax.tree.map(lambda a: a[0], params)
+        s = jax.tree.map(lambda a: a[0], opt_state)
+        g = jax.tree.map(lambda a: a[0], grads)
+        updates, s = opt.update(g, s, p)
+        return expand(apply_updates(p, updates)), expand(s)
+
+    def gossip_body(params, bits):
+        p = jax.tree.map(lambda a: a[0], params)
+        if gossip_mode == "masked":
+            p = mix_matchings_masked(p, alpha, perms, bits, info)
+        else:
+            p = mix_matchings(p, alpha, perms, active, info)
+        return expand(p)
+
+    fwd_bwd = jax.jit(jax.shard_map(
+        fwd_bwd_body, mesh=mesh,
+        in_specs=(P(nodes_ax), P(nodes_ax)),
+        out_specs=(P(nodes_ax), P(nodes_ax), P(nodes_ax)),
+        axis_names=manual,
+    ))
+    optimizer = jax.jit(jax.shard_map(
+        opt_body, mesh=mesh,
+        in_specs=(P(nodes_ax), P(nodes_ax), P(nodes_ax)),
+        out_specs=(P(nodes_ax), P(nodes_ax)),
+        axis_names=manual,
+    ))
+    gossip = None
+    if gossip_mode != "none":
+        gossip = jax.jit(jax.shard_map(
+            gossip_body, mesh=mesh,
+            in_specs=(P(nodes_ax), P()),
+            out_specs=P(nodes_ax),
+            axis_names=manual,
+        ))
+
+    def step(params, opt_state, batch, bits, *, step: int = -1):
+        phase_ms = {}
+        (grads, losses, metrics), phase_ms["fwd_bwd"] = timer.measure(
+            "fwd_bwd", lambda: fwd_bwd(params, batch),
+            cat="phase", step=step, tid=0,
+        )
+        (params, opt_state), phase_ms["optimizer"] = timer.measure(
+            "optimizer", lambda: optimizer(params, opt_state, grads),
+            cat="phase", step=step, tid=0,
+        )
+        if gossip is not None:
+            params, phase_ms["gossip"] = timer.measure(
+                "gossip", lambda: gossip(params, bits),
+                cat="phase", step=step, tid=0,
+            )
+        step_wrapper.last_phase_ms = phase_ms
+        return params, opt_state, losses, metrics
+
+    step_wrapper = step
+    step_wrapper.last_phase_ms = {}
+    return step_wrapper

@@ -158,8 +158,9 @@ def mix_matchings(
         if not _is_float(x):
             return x
         acc = None
-        for pairs in pair_lists:
-            p = jax.lax.ppermute(x, name, pairs).astype(jnp.float32)
+        for j, pairs in zip(active, pair_lists):
+            with jax.named_scope(f"gossip/matching{j}"):
+                p = jax.lax.ppermute(x, name, pairs).astype(jnp.float32)
             acc = p if acc is None else acc + p
         # y with x + alpha*(y - x) == x + alpha * sum_j (partner_j - x)
         return acc - (k - 1.0) * x.astype(jnp.float32)
@@ -191,7 +192,8 @@ def mix_matchings_masked(
         xf = x.astype(jnp.float32)
         delta = jnp.zeros_like(xf)
         for j, pairs in enumerate(pair_lists):
-            p = jax.lax.ppermute(x, name, pairs)
+            with jax.named_scope(f"gossip/matching{j}"):
+                p = jax.lax.ppermute(x, name, pairs)
             delta = delta + bits[j].astype(jnp.float32) * (
                 p.astype(jnp.float32) - xf
             )
@@ -230,9 +232,9 @@ def launch_matchings_masked(
     for bkt in buckets:
         acc = jnp.zeros_like(bkt)
         for j, pairs in enumerate(pair_lists):
-            acc = acc + bits[j].astype(jnp.float32) * jax.lax.ppermute(
-                bkt, name, pairs
-            )
+            with jax.named_scope(f"gossip/matching{j}"):
+                p = jax.lax.ppermute(bkt, name, pairs)
+            acc = acc + bits[j].astype(jnp.float32) * p
         recv.append(acc)
     return tuple(recv)
 

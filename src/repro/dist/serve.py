@@ -18,8 +18,17 @@ PyTree = Any
 
 
 def make_prefill_step(model, rules: shd.ShardingRules, *, max_len: int):
-    """(params, tokens(B,S), caches, [encoder_frames|prefix_embeddings])
-    -> (logits(B,1,V), caches)."""
+    """Prefill step builder.
+
+    The returned function maps ``(params, tokens, caches)`` — tokens
+    int32 ``(B, S)``, caches from ``model.init_cache(B, max_len)`` —
+    to ``(logits, caches)`` with logits ``(B, S, vocab)`` in the
+    model's activation dtype and every layer's KV/SSM cache filled for
+    positions ``[0, S)``. Optional ``encoder_frames`` (audio frontends,
+    bf16 ``(B, encoder_seq, frontend_dim)``) / ``prefix_embeddings``
+    (vlm prefix, ``(B, P, d_model)``) feed multimodal prefixes. Pure;
+    callers jit it. Sequence positions beyond ``max_len`` are a
+    contract violation (the cache has no room for them)."""
 
     def step(params, tokens, caches, *, encoder_frames=None,
              prefix_embeddings=None):
@@ -39,7 +48,15 @@ def make_prefill_step(model, rules: shd.ShardingRules, *, max_len: int):
 
 
 def make_decode_step(model, rules: shd.ShardingRules, *, max_len: int):
-    """(params, tokens(B,1), caches, start_position) -> (logits, caches)."""
+    """Single-token decode step builder.
+
+    The returned function maps ``(params, tokens, caches,
+    start_position)`` — tokens int32 ``(B, 1)``, ``start_position`` an
+    int32 scalar (python int or traced) giving the absolute position
+    the token occupies — to ``(logits, caches)`` with logits
+    ``(B, 1, vocab)`` and the caches advanced by one position. The same
+    jitted executable serves every position (the position is a traced
+    scalar, not a static shape)."""
 
     def step(params, tokens, caches, start_position):
         with shd.use_rules(rules):

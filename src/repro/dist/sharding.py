@@ -51,6 +51,8 @@ _STATE = threading.local()
 
 
 def current_rules() -> Optional[ShardingRules]:
+    """The innermost active ``use_rules`` rules, or None outside any
+    (``shard`` is then the identity)."""
     stack = getattr(_STATE, "stack", None)
     return stack[-1] if stack else None
 
@@ -132,6 +134,8 @@ def param_pspecs(axes_tree: PyTree, rules: ShardingRules) -> PyTree:
 
 
 def named_shardings(pspec_tree: PyTree, mesh: Mesh) -> PyTree:
+    """Bind a PartitionSpec pytree to ``mesh`` as ``NamedSharding``s
+    (the form ``jax.device_put`` / ``jax.jit`` placement wants)."""
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s),
         pspec_tree,

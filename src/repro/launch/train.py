@@ -35,11 +35,23 @@ scan compile times — unrolling via ``scan_layers=False`` is no longer
 the answer. ``--no-stream-scan`` restores the stack-at-once gather for
 A/B comparison.
 
+``--trace DIR`` measures the run instead of only simulating it
+(``repro.telemetry``): sequential modes execute through the *phased*
+step builders (separately fenced executables per runtime phase), each
+matching's exchange is probed as its own fenced ppermute, every step
+prints a measured metrics line (step ms, comm ms, comm/compute overlap
+ratio, modeled bytes), and on exit DIR receives ``events.jsonl``,
+``metrics.jsonl``, and a Perfetto-loadable ``trace.json``. Fencing
+costs dispatch overlap, so traced step times are an upper bound — see
+``docs/observability.md``.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch internlm2_1_8b \
       --preset tiny --graph paper8 --nodes 8 --budget 0.5 --steps 100
   PYTHONPATH=src python -m repro.launch.train --preset tiny --nodes 4 \
       --shard 2 --gossip-mode overlap --steps 50
+  PYTHONPATH=src python -m repro.launch.train --preset tiny --steps 20 \
+      --trace out/trace
 """
 from __future__ import annotations
 
@@ -51,7 +63,10 @@ import time
 import numpy as np
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
+    """The driver's CLI. Separate from :func:`main` so tooling
+    (``repro.analysis.docs_lint``) can verify documented flags against
+    the real parser without importing jax or running a step."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2_1_8b")
     ap.add_argument("--preset", default="tiny", choices=("tiny", "small", "full"))
@@ -93,7 +108,19 @@ def main():
     ap.add_argument("--resume", default="")
     ap.add_argument("--csv", default="")
     ap.add_argument("--non-iid", action="store_true")
-    args = ap.parse_args()
+    ap.add_argument("--trace", default="", metavar="DIR",
+                    help="measure the run: device-synchronized per-phase "
+                         "timers + per-matching comm probes, a per-step "
+                         "metrics line, and on exit a JSONL event log "
+                         "(events.jsonl) plus a Chrome trace (trace.json, "
+                         "loads in chrome://tracing / Perfetto) in DIR. "
+                         "Adds fencing overhead — leave off for "
+                         "throughput runs (docs/observability.md)")
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     if args.shard < 1:
         raise SystemExit(f"--shard must be >= 1, got {args.shard}")
@@ -240,6 +267,27 @@ def main():
         gossip_mode = (
             "none" if args.mode == "local" else args.gossip_mode
         )
+        # --- telemetry (--trace DIR) -----------------------------------
+        # A disabled StepTimer's spans are shared no-ops (identity
+        # fence), so the untraced loop runs the byte-identical program.
+        from repro.telemetry import StepTimer, TraceRecorder
+
+        traced = bool(args.trace)
+        recorder = None
+        if traced:
+            recorder = TraceRecorder(meta=dict(
+                arch=args.arch, preset=args.preset, graph=args.graph,
+                nodes=args.nodes, shard=args.shard, mode=args.mode,
+                gossip_mode=gossip_mode, budget=args.budget,
+                steps=args.steps, batch_per_node=args.batch_per_node,
+                seq=args.seq,
+            ))
+        timer = StepTimer(recorder)
+        # Phased executors (per-phase fenced timing) for the sequential
+        # modes; overlap keeps the fused step — fencing its phases would
+        # serialize the very overlap being measured — and is timed
+        # whole-step with per-matching comm probes instead.
+        phased = traced and gossip_mode != "overlap"
         gstate = flush = None
         if gossip_mode == "overlap":
             if use_fsdp:
@@ -260,9 +308,20 @@ def main():
                 key = tuple(active)
             if key not in step_cache:
                 if use_fsdp:
-                    step_cache[key] = fsdp.make_fsdp_train_step(
-                        model, opt, plan, spec, layout,
-                        gossip_mode=gossip_mode,
+                    if phased:
+                        step_cache[key] = fsdp.make_phased_fsdp_train_step(
+                            model, opt, plan, spec, layout, timer=timer,
+                            gossip_mode=gossip_mode,
+                        )
+                    else:
+                        step_cache[key] = fsdp.make_fsdp_train_step(
+                            model, opt, plan, spec, layout,
+                            gossip_mode=gossip_mode,
+                        )
+                elif phased:
+                    step_cache[key] = dt.make_phased_train_step(
+                        model, opt, plan, spec, timer=timer,
+                        gossip_mode=gossip_mode, active=tuple(active),
                     )
                 else:
                     step_cache[key] = dt.make_train_step(
@@ -291,7 +350,37 @@ def main():
         )
         it = iter(data)
 
+        # comm probes: each matching's exchange measured as its own
+        # fenced executable (once, up front; "comm" lane in the trace),
+        # with the modeled per-matching bytes from analysis.bytes_model
+        matching_ms = {}
+        per_matching_bytes = 0
+        if traced:
+            from repro.analysis import bytes_model
+            from repro.telemetry import probes as tprobes
+
+            if use_fsdp:
+                elems = int(layout.plan.total_elements)
+                per_matching_bytes = int(bytes_model.bucket_plan_bytes(
+                    layout.plan, 1)["per_matching_comm_bytes"])
+            else:
+                abs_local = jax.eval_shape(
+                    lambda: model.init(jax.random.key(0))
+                )
+                elems = int(sum(
+                    np.prod(l.shape) for l in jax.tree.leaves(abs_local)
+                ))
+                per_matching_bytes = bytes_model.tree_storage_bytes(abs_local)
+            probe_rows = tprobes.measure_matchings(
+                plan, spec, per_node_elements=elems, timer=timer, iters=3,
+            )
+            matching_ms = {r["matching"]: r["mean_ms"] for r in probe_rows}
+            print("trace: per-matching comm probes "
+                  + " ".join(f"m{r['matching']}={r['mean_ms']:.2f}ms"
+                             for r in probe_rows))
+
         rows = []
+        trace_rows = []
         sim_time = 0.0
         t0 = time.time()
         for k in range(start_step, args.steps):
@@ -301,19 +390,43 @@ def main():
                 schedule.activations[k].astype(np.float32)
             )
             stepf = get_step(active)
-            if gossip_mode == "overlap":
-                params, opt_state, gstate, losses, metrics = stepf(
-                    params, opt_state, gstate, batch, bits
+            t0s = time.perf_counter()
+            with timer.phase("step", cat="step", step=k) as sp:
+                if gossip_mode == "overlap":
+                    params, opt_state, gstate, losses, metrics = stepf(
+                        params, opt_state, gstate, batch, bits
+                    )
+                    # delayed gossip hides behind compute: the step costs
+                    # the slower of the two, not their sum
+                    sim_time += max(schedule.comm_units(k), 1.0)
+                elif phased:
+                    params, opt_state, losses, metrics = stepf(
+                        params, opt_state, batch, bits, step=k
+                    )
+                    sim_time += schedule.comm_units(k) + 1.0
+                else:
+                    params, opt_state, losses, metrics = stepf(
+                        params, opt_state, batch, bits
+                    )
+                    # paper's delay model: one unit per activated matching
+                    sim_time += schedule.comm_units(k) + 1.0   # +1 compute
+                sp.fence((params, losses))
+            if traced:
+                step_ms = (time.perf_counter() - t0s) * 1e3
+                if phased:
+                    comm_ms = stepf.last_phase_ms.get("gossip", 0.0)
+                    phase_ms = stepf.last_phase_ms
+                else:
+                    comm_ms = sum(matching_ms.get(j, 0.0) for j in active)
+                    phase_ms = None
+                mrec = tprobes.step_metrics(
+                    step=k, step_ms=step_ms, comm_ms=comm_ms,
+                    gossip_mode=gossip_mode,
+                    comm_bytes=per_matching_bytes * len(active),
+                    phase_ms=phase_ms,
                 )
-                # delayed gossip hides behind compute: the step costs the
-                # slower of the two, not their sum
-                sim_time += max(schedule.comm_units(k), 1.0)
-            else:
-                params, opt_state, losses, metrics = stepf(
-                    params, opt_state, batch, bits
-                )
-                # paper's delay model: one unit per activated matching
-                sim_time += schedule.comm_units(k) + 1.0   # +1 compute unit
+                trace_rows.append(mrec)
+                print(tprobes.format_metrics_line(mrec))
             if k % 10 == 0 or k == args.steps - 1:
                 loss_mean = float(jnp.mean(losses))
                 cons = float(consensus(params))
@@ -364,6 +477,18 @@ def main():
                 w.writeheader()
                 w.writerows(rows)
             print("wrote", args.csv)
+
+        if traced:
+            import json
+
+            jsonl_path, chrome_path = recorder.flush(args.trace)
+            metrics_path = os.path.join(args.trace, "metrics.jsonl")
+            with open(metrics_path, "w") as f:
+                for r in trace_rows:
+                    f.write(json.dumps(r) + "\n")
+            print(f"wrote trace: {jsonl_path} + {chrome_path} "
+                  f"({len(recorder.events())} events, "
+                  f"{recorder.num_dropped} dropped) and {metrics_path}")
 
 
 if __name__ == "__main__":

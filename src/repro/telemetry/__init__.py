@@ -1,0 +1,56 @@
+"""Measured wall-clock telemetry for the decentralized runtime.
+
+MATCHA's headline claim is an *error-runtime* win — less wall-clock
+time to the same loss — but the rest of this repo charges time with the
+paper's linear delay model (``comm_units + 1`` sequential,
+``max(comm_units, 1)`` overlapped). This package is the measurement
+side: low-overhead host timers and an event log that turn the simulated
+trade-off curves into measured ones.
+
+Three modules:
+
+* :mod:`repro.telemetry.trace` — the event model. ``TraceEvent`` (one
+  completed span, microsecond units), ``TraceRecorder`` (bounded ring
+  buffer), JSONL event-log read/write and a lossless Chrome-trace
+  (``chrome://tracing`` / Perfetto) export. Schema documented in
+  ``docs/observability.md``.
+* :mod:`repro.telemetry.timers` — ``StepTimer``: phase spans with
+  ``jax.block_until_ready`` fencing at the boundaries when tracing is
+  on, and a zero-cost no-op path when off (``timed_step`` returns the
+  wrapped callable *unchanged* — same object — so the traced program
+  cannot differ).
+* :mod:`repro.telemetry.probes` — measured communication: per-matching
+  ppermute probes (each matching's exchange timed as its own fenced
+  executable) and the per-step metrics record (measured step/comm ms,
+  comm/compute overlap ratio, bytes from ``repro.analysis.bytes_model``).
+
+Nothing here imports ``repro.dist`` at module scope (the dist modules
+own the phase *hooks*; probes import them lazily), so enabling
+telemetry never changes what the training step traces — the property
+``tests/test_telemetry.py`` locks down via ``repro.analysis.traversal``.
+"""
+from __future__ import annotations
+
+from repro.telemetry.timers import PHASES, StepTimer, timed_step
+from repro.telemetry.trace import (
+    TraceEvent,
+    TraceRecorder,
+    from_chrome_trace,
+    read_jsonl,
+    to_chrome_trace,
+    write_chrome_trace,
+    write_jsonl,
+)
+
+__all__ = [
+    "PHASES",
+    "StepTimer",
+    "TraceEvent",
+    "TraceRecorder",
+    "from_chrome_trace",
+    "read_jsonl",
+    "timed_step",
+    "to_chrome_trace",
+    "write_chrome_trace",
+    "write_jsonl",
+]

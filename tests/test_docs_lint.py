@@ -1,0 +1,65 @@
+"""repro.analysis.docs_lint: the docs must stay lintable — every
+registered parser importable without jax, the real repo clean, and the
+checks able to catch each class of violation they exist for."""
+import os
+
+from repro.analysis import docs_lint
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_parser_factories_importable_and_nonempty():
+    """Every registered entry point exposes a build_parser() whose long
+    options are discoverable (the docs-lint CI step depends on this)."""
+    for mod in docs_lint.PARSER_FACTORIES:
+        flags = docs_lint.parser_flags(mod)
+        assert "--help" in flags, mod
+        assert len(flags) >= 2, f"{mod}: suspiciously few flags {flags}"
+
+
+def test_repo_docs_are_clean():
+    assert docs_lint.run(REPO) == []
+
+
+def test_check_flags_catches_attributed_typo():
+    known = {mod: docs_lint.parser_flags(mod)
+             for mod in docs_lint.PARSER_FACTORIES}
+    text = "```\npython -m repro.launch.train --preset tiny --stepz 4\n```\n"
+    viols = docs_lint.check_flags("d.md", text, known)
+    assert len(viols) == 1 and "--stepz" in viols[0][1]
+    # the same flags spelled right are clean
+    ok = "```\npython -m repro.launch.train --preset tiny --steps 4\n```\n"
+    assert docs_lint.check_flags("d.md", ok, known) == []
+
+
+def test_check_flags_contextfree_uses_union():
+    """Inline flags with no `python -m` context are checked against the
+    union of all parsers + the FOREIGN_FLAGS allowlist."""
+    known = {mod: docs_lint.parser_flags(mod)
+             for mod in docs_lint.PARSER_FACTORIES}
+    assert docs_lint.check_flags("d.md", "pass `--trace` a dir", known) == []
+    viols = docs_lint.check_flags("d.md", "pass `--no-such-flag`", known)
+    assert len(viols) == 1 and "--no-such-flag" in viols[0][1]
+    # allowlisted foreign flags (pytest, XLA) never trip the lint
+    assert docs_lint.check_flags("d.md", "`--durations=10`", known) == []
+
+
+def test_check_links_catches_dangling(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "real.md").write_text("x")
+    text = "[ok](docs/real.md) and [bad](docs/ghost.md)\n"
+    viols = docs_lint.check_links("README.md", text, str(tmp_path))
+    assert len(viols) == 1 and "docs/ghost.md" in viols[0][1]
+    # md mentions inside code spans are checked too
+    viols = docs_lint.check_links(
+        "README.md", "see `docs/ghost.md`", str(tmp_path))
+    assert len(viols) == 1
+    # external links are ignored
+    assert docs_lint.check_links(
+        "README.md", "[x](https://example.com/a.md)", str(tmp_path)) == []
+
+
+def test_run_reports_missing_doc(tmp_path):
+    viols = docs_lint.run(str(tmp_path))
+    assert {v[0] for v in viols} == set(docs_lint.DOC_FILES)
+    assert all("missing" in v[1] for v in viols)

@@ -1,0 +1,366 @@
+"""repro.telemetry: schema round-trip, timer semantics, the
+tracing-off no-change guarantee, phased-vs-fused parity, and the
+--trace driver smoke.
+
+The pure trace/timer tests run in-process (no jax device work). The
+runtime tests follow the repo's subprocess convention (XLA host device
+count must be set before jax initializes), like
+tests/test_gossip_parity.py.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(body: str, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    res = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(body)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert res.returncode == 0, f"stderr:\n{res.stderr[-4000:]}"
+    return res.stdout
+
+
+# ---------------------------------------------------------------------------
+# trace schema
+# ---------------------------------------------------------------------------
+def _sample_events():
+    from repro.telemetry import TraceEvent
+
+    return [
+        TraceEvent(name="step", cat="step", ts_us=100, dur_us=5000, step=0),
+        TraceEvent(name="fwd_bwd", cat="phase", ts_us=150, dur_us=3000,
+                   step=0, depth=1),
+        TraceEvent(name="gossip/matching2", cat="comm", ts_us=9000,
+                   dur_us=40, tid=1, args={"bytes": 1024, "mode": "probe"}),
+    ]
+
+
+def test_jsonl_round_trip(tmp_path):
+    from repro.telemetry import read_jsonl, write_jsonl
+    from repro.telemetry.trace import SCHEMA
+
+    events = _sample_events()
+    path = str(tmp_path / "events.jsonl")
+    write_jsonl(events, path, meta={"arch": "x"}, dropped=3)
+    header, back = read_jsonl(path)
+    assert header["schema"] == SCHEMA
+    assert header["meta"] == {"arch": "x"} and header["dropped"] == 3
+    assert back == events
+
+
+def test_jsonl_rejects_foreign_schema(tmp_path):
+    import pytest
+
+    from repro.telemetry import read_jsonl
+
+    path = str(tmp_path / "events.jsonl")
+    with open(path, "w") as f:
+        f.write(json.dumps({"schema": "someone.else/9"}) + "\n")
+    with pytest.raises(ValueError):
+        read_jsonl(path)
+
+
+def test_chrome_trace_round_trip():
+    """JSONL events -> Chrome trace -> events is lossless: step and
+    depth (which the Chrome format has no field for) tunnel through
+    args and come back out."""
+    from repro.telemetry import from_chrome_trace, to_chrome_trace
+
+    events = _sample_events()
+    chrome = to_chrome_trace(events, meta={"arch": "x"}, dropped=0)
+    assert all(e["ph"] == "X" for e in chrome["traceEvents"])
+    assert from_chrome_trace(chrome) == events
+
+
+def test_chrome_trace_files(tmp_path):
+    from repro.telemetry import write_chrome_trace
+    from repro.telemetry.trace import read_chrome_trace
+
+    events = _sample_events()
+    path = str(tmp_path / "trace.json")
+    write_chrome_trace(events, path)
+    with open(path) as f:
+        blob = json.load(f)
+    assert "traceEvents" in blob          # the Perfetto/chrome contract
+    assert read_chrome_trace(path) == events
+
+
+def test_ring_buffer_drops_oldest():
+    from repro.telemetry import TraceEvent, TraceRecorder
+
+    rec = TraceRecorder(capacity=4)
+    for i in range(10):
+        rec.record(TraceEvent(name=f"e{i}", cat="x", ts_us=i, dur_us=1))
+    assert rec.num_dropped == 6
+    assert [e.name for e in rec.events()] == ["e6", "e7", "e8", "e9"]
+
+
+# ---------------------------------------------------------------------------
+# timer semantics
+# ---------------------------------------------------------------------------
+def test_timer_monotone_and_nested_consistent():
+    """Spans record positive durations, outer spans contain inner ones
+    in time, and depth reflects nesting at record time."""
+    import time
+
+    from repro.telemetry import StepTimer, TraceRecorder
+
+    rec = TraceRecorder()
+    timer = StepTimer(rec)
+    with timer.phase("step", step=0):
+        with timer.phase("fwd_bwd", step=0):
+            time.sleep(0.002)
+        with timer.phase("optimizer", step=0):
+            time.sleep(0.001)
+    inner1, inner2, outer = rec.events()    # spans record on exit
+    assert [e.name for e in (inner1, inner2, outer)] == [
+        "fwd_bwd", "optimizer", "step"]
+    assert outer.depth == 0 and inner1.depth == 1 and inner2.depth == 1
+    for e in rec.events():
+        assert e.dur_us > 0
+    # containment: outer starts no later and ends no earlier
+    assert outer.ts_us <= inner1.ts_us
+    assert outer.ts_us + outer.dur_us >= inner2.ts_us + inner2.dur_us
+    # monotone: second inner span starts after the first ends
+    assert inner2.ts_us >= inner1.ts_us + inner1.dur_us
+
+
+def test_timer_measure_returns_result_and_duration():
+    from repro.telemetry import StepTimer, TraceRecorder
+
+    rec = TraceRecorder()
+    timer = StepTimer(rec)
+    out, ms = timer.measure("probe", lambda: 41 + 1)
+    assert out == 42 and ms >= 0.0
+    assert rec.events()[-1].name == "probe"
+
+
+def test_disabled_timer_is_structurally_free():
+    """The tracing-off guarantee: a disabled timer's spans are one
+    shared no-op object with an identity fence, ``timed_step`` returns
+    the original function object, and ``measure`` still fences but
+    records nothing."""
+    from repro.telemetry import StepTimer, timed_step
+
+    off = StepTimer(None)
+    assert not off.enabled
+    s1 = off.phase("step")
+    s2 = off.phase("fwd_bwd", step=3)
+    assert s1 is s2                      # shared singleton, no allocation
+    obj = object()
+    with s1 as sp:
+        assert sp.fence(obj) is obj      # identity, no device sync
+
+    def f(a, b):
+        return a + b
+
+    assert timed_step(f, off) is f       # byte-identical program when off
+    out, ms = off.measure("x", lambda: 7)
+    assert out == 7 and ms >= 0.0
+
+
+def test_enabled_timer_requires_recorder():
+    import pytest
+
+    from repro.telemetry import StepTimer
+
+    with pytest.raises(ValueError):
+        StepTimer(None, enabled=True)
+
+
+def test_step_metrics_fields():
+    from repro.telemetry.probes import format_metrics_line, step_metrics
+
+    m = step_metrics(step=3, step_ms=50.0, comm_ms=10.0,
+                     gossip_mode="masked", comm_bytes=4096,
+                     phase_ms={"fwd_bwd": 35.0, "gossip": 10.0})
+    assert m["comm_fraction"] == 0.2
+    assert m["overlap_ratio"] == 0.0     # only overlap mode reports it
+    assert m["fwd_bwd_ms"] == 35.0
+    mo = step_metrics(step=0, step_ms=50.0, comm_ms=30.0,
+                      gossip_mode="overlap")
+    assert mo["overlap_ratio"] == 0.6
+    line = format_metrics_line(m)
+    assert "trace step" in line and "comm" in line and "fwd_bwd" in line
+
+
+# ---------------------------------------------------------------------------
+# tracing-off: no jaxpr / collective changes
+# ---------------------------------------------------------------------------
+def test_named_scope_and_fused_step_unchanged():
+    """The phase annotations in the fused steps are jax.named_scope —
+    metadata only. A named_scope-wrapped body must trace to the same
+    equations, and the fused masked train step must still trace exactly
+    the planned ppermute inventory (checked with the analysis pass the
+    CI gate uses)."""
+    run_sub("""
+        import jax, jax.numpy as jnp
+        import numpy as np
+
+        def plain(x):
+            return jnp.sin(x) * 2.0 + 1.0
+
+        def scoped(x):
+            with jax.named_scope("fwd_bwd"):
+                return jnp.sin(x) * 2.0 + 1.0
+
+        x = jnp.ones((4, 4))
+        assert str(jax.make_jaxpr(plain)(x)) == str(jax.make_jaxpr(scoped)(x))
+
+        from repro.analysis.checks import check_ppermutes
+        from repro.analysis.collectives import collect
+        from repro.analysis.traversal import to_closed_jaxpr
+        from repro.configs.registry import get_smoke_config
+        from repro.core import paper_figure1_graph, plan_matcha
+        from repro.dist import decen_train as dt
+        from repro.launch.mesh import make_test_mesh
+        from repro.models.transformer import Model
+        from repro.optim.optimizers import sgd
+
+        cfg = get_smoke_config("internlm2_1_8b")
+        model = Model(cfg)
+        mesh = make_test_mesh(nodes=8, model=1)
+        spec = dt.make_spec(mesh, cfg)
+        plan = plan_matcha(paper_figure1_graph(), 0.5, budget_steps=400)
+        opt = sgd(0.1, momentum=0.9)
+        params = jax.eval_shape(lambda: dt.init_stacked_params(model, spec))
+        ostate = jax.eval_shape(lambda: dt.init_stacked_opt_state(opt, model, spec))
+        batch = {k: jax.ShapeDtypeStruct((8, 2, 16), jnp.int32)
+                 for k in ("tokens", "labels")}
+        bits = jnp.zeros((plan.num_matchings,), jnp.float32)
+        step = dt.make_train_step(model, opt, plan, spec, gossip_mode="masked")
+        closed = to_closed_jaxpr(step, params, ostate, batch, bits)
+        records = collect(closed)
+        viols = check_ppermutes(
+            [r for r in records], num_nodes=8, node_axes=spec.node_axes,
+            planned_pairs=plan.ppermute_pairs(), expect_all_planned=True,
+            where="telemetry/fused",
+        )
+        assert not viols, viols
+        print("OK")
+    """)
+
+
+# ---------------------------------------------------------------------------
+# phased executors == fused step
+# ---------------------------------------------------------------------------
+def test_phased_step_matches_fused():
+    """make_phased_train_step (separately fenced executables, used by
+    --trace) must reproduce the fused masked step's trajectory and
+    populate last_phase_ms for every phase."""
+    run_sub("""
+        import jax, jax.numpy as jnp
+        import numpy as np
+
+        from repro.configs.registry import get_smoke_config
+        from repro.core import paper_figure1_graph, plan_matcha
+        from repro.data.pipeline import DecentralizedBatches
+        from repro.dist import decen_train as dt
+        from repro.dist import sharding as shd
+        from repro.launch.mesh import make_test_mesh
+        from repro.models.transformer import Model
+        from repro.optim.optimizers import sgd
+        from repro.telemetry import StepTimer, TraceRecorder
+
+        cfg = get_smoke_config("internlm2_1_8b")
+        model = Model(cfg)
+        mesh = make_test_mesh(nodes=8, model=1)
+        spec = dt.make_spec(mesh, cfg)
+        plan = plan_matcha(paper_figure1_graph(), 0.5, budget_steps=400)
+        sched = plan.schedule(3, seed=1)
+        opt = sgd(0.3, momentum=0.9)
+
+        def init():
+            p = dt.init_stacked_params(model, spec, seed=0)
+            o = dt.init_stacked_opt_state(opt, model, spec)
+            ps = dt.stacked_param_shardings(model, spec)
+            p = jax.device_put(p, shd.named_shardings(ps, mesh))
+            return p, o
+
+        rec = TraceRecorder()
+        timer = StepTimer(rec)
+        with jax.set_mesh(mesh):
+            fused = dt.make_train_step(model, opt, plan, spec,
+                                       gossip_mode="masked")
+            phased = dt.make_phased_train_step(model, opt, plan, spec,
+                                               timer=timer,
+                                               gossip_mode="masked")
+            pf, of = init()
+            pp, op = init()
+            data = DecentralizedBatches(cfg, 8, 2, 32, seed=0)
+            it = iter(data)
+            for k in range(3):
+                bits = jnp.asarray(sched.activations[k].astype(np.float32))
+                batch = next(it)
+                pf, of, lf, _ = fused(pf, of, batch, bits)
+                pp, op, lp, _ = phased(pp, op, batch, bits, step=k)
+                np.testing.assert_allclose(
+                    np.asarray(lf), np.asarray(lp), rtol=2e-5)
+        for leaf_f, leaf_p in zip(jax.tree.leaves(pf), jax.tree.leaves(pp)):
+            np.testing.assert_allclose(
+                np.asarray(leaf_f), np.asarray(leaf_p), rtol=2e-4, atol=1e-5)
+        assert set(phased.last_phase_ms) == {"fwd_bwd", "optimizer", "gossip"}
+        assert all(v >= 0 for v in phased.last_phase_ms.values())
+        names = {e.name for e in rec.events()}
+        assert {"fwd_bwd", "optimizer", "gossip"} <= names
+        # overlap mode must refuse phased fencing (it would serialize
+        # the overlap being measured)
+        try:
+            dt.make_phased_train_step(model, opt, plan, spec,
+                                      timer=timer, gossip_mode="overlap")
+            raise AssertionError("phased overlap did not raise")
+        except ValueError:
+            pass
+        print("OK")
+    """)
+
+
+# ---------------------------------------------------------------------------
+# driver smoke: --trace produces a loadable trace
+# ---------------------------------------------------------------------------
+def test_train_trace_smoke(tmp_path):
+    """--trace on the tiny preset must emit events.jsonl + metrics.jsonl
+    + a Chrome trace that loads and round-trips."""
+    out_dir = str(tmp_path / "trace")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--preset", "tiny",
+         "--nodes", "8", "--steps", "4", "--batch-per-node", "2",
+         "--seq", "32", "--trace", out_dir],
+        capture_output=True, text=True, timeout=900, env=env, cwd=REPO,
+    )
+    assert res.returncode == 0, f"stderr:\n{res.stderr[-4000:]}"
+
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.telemetry import read_jsonl
+    from repro.telemetry.trace import (
+        CHROME_TRACE, EVENTS_JSONL, SCHEMA, read_chrome_trace,
+    )
+
+    header, events = read_jsonl(os.path.join(out_dir, EVENTS_JSONL))
+    assert header["schema"] == SCHEMA
+    assert header["meta"]["preset"] == "tiny"
+    assert events, "no events recorded"
+    names = {e.name for e in events}
+    assert "step" in names and "fwd_bwd" in names
+    assert any(n.startswith("gossip/matching") for n in names)
+    chrome = read_chrome_trace(os.path.join(out_dir, CHROME_TRACE))
+    assert chrome == events              # lossless export
+
+    with open(os.path.join(out_dir, "metrics.jsonl")) as f:
+        metrics = [json.loads(line) for line in f]
+    assert len(metrics) == 4
+    for m in metrics:
+        assert m["step_ms"] > 0 and m["comm_ms"] >= 0
+        assert m["comm_fraction"] >= 0.0 and m["comm_bytes"] > 0
+    assert "wrote trace:" in res.stdout
