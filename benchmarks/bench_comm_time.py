@@ -30,6 +30,16 @@ directional check carries a generous tolerance. The worker's trace
 lands in ``benchmarks/results/trace/`` (the CI bench-smoke upload).
 Disable with ``--no-measured`` / ``run(measured=False)``.
 
+Degraded-mode section (``docs/fault_model.md``): a ``faults`` table at
+the measured budget reports, per injected drop rate p_drop in
+{0, 0.1, 0.3}, the exact contraction factor at the faulted activation
+probabilities p_eff = p * (1 - p_drop), the (unchanged) issued comm
+units, the expected surviving exchanges, and the measured masked-mode
+step time under a seeded FaultSchedule. Analytic columns are gated by
+deterministic checks (rho monotone in p_drop, < 1 throughout); the
+measured column is directional wall-clock only and — like every
+measured number — never enters the ``--compare`` regression fields.
+
 FSDP composition: the sharded-replica mode (``repro.dist.fsdp``) keeps
 1/S of every fp32 bucket per device and gossips the shards directly, so
 per-device param bytes AND per-matching gossip bytes both shrink by the
@@ -229,6 +239,55 @@ def _measured_worker(out_dir: str, steps: int, cb: float) -> dict:
                 p95_ms=round(s["p95_ms"], 4),
                 n=s["n"],
             )
+
+        # degraded-mode wall clock: the masked strategy re-run under a
+        # seeded FaultSchedule (per-node gate rows). Every ppermute is
+        # still issued — drops only gate the consensus delta — so these
+        # times are directional context next to the fault-free
+        # sequential row, never a regression gate.
+        from repro.faults import FaultSpec, make_fault_schedule
+
+        out["faulted"] = []
+        for pd in (0.1, 0.3):
+            opt = sgd(0.1, momentum=0.9)
+            params = dt.init_stacked_params(model, spec, seed=0)
+            opt_state = dt.init_stacked_opt_state(opt, model, spec)
+            pspecs = dt.stacked_param_shardings(model, spec)
+            params = jax.device_put(params, shd.named_shardings(pspecs, mesh))
+            data = DecentralizedBatches(cfg, 8, 4, 64, seed=0)
+            it = iter(data)
+            fsched = make_fault_schedule(
+                plan, steps + warmup, FaultSpec(p_drop=pd, seed=2)
+            )
+            step = dt.make_train_step(
+                model, opt, plan, spec, gossip_mode="masked", faulted=True
+            )
+            samples = []
+            dropped = 0
+            for k in range(steps + warmup):
+                bits = jnp.asarray(
+                    fsched.node_bits(sched.activations[k], k)
+                )
+                batch = next(it)
+                t0 = time.perf_counter()
+                with timer.phase("step", cat="step", step=k,
+                                 mode=f"faulted_p{pd}") as sp:
+                    params, opt_state, losses, _ = step(
+                        params, opt_state, batch, bits
+                    )
+                    sp.fence((params, losses))
+                if k >= warmup:
+                    samples.append((time.perf_counter() - t0) * 1e3)
+                    dropped += fsched.dropped_links(sched.activations[k], k)
+            s = summarize_ms(samples)
+            out["faulted"].append(dict(
+                p_drop=pd,
+                measured_step_ms=round(s["mean_ms"], 4),
+                p50_ms=round(s["p50_ms"], 4),
+                p95_ms=round(s["p95_ms"], 4),
+                n=s["n"],
+                dropped_exchanges=int(dropped),
+            ))
     jsonl_path, chrome_path = recorder.flush(trace_dir(out_dir))
     out["trace"] = dict(events=jsonl_path, chrome=chrome_path,
                         num_events=len(recorder.events()))
@@ -383,6 +442,48 @@ def run(out_dir: str = RESULTS_DIR, measured: bool | None = None):
                 r["peak_transient_bytes_scan_streamed"]
                 == r["peak_transient_bytes_streamed"],
             ))
+    # degraded-mode section (docs/fault_model.md): modeled contraction
+    # + comm at injected drop rates. rho rises with p_drop (less
+    # expected mixing) while the *issued* comm units are unchanged —
+    # a dropped exchange still runs, only its delta is gated. The
+    # measured column is directional wall-clock context and, like all
+    # measured numbers, never enters REGRESSION_FIELDS.
+    from repro.core.matcha import effective_activation_probs
+    from repro.core.mixing import exact_rho
+
+    mp = plans[MEASURED_CB]
+    lap = [sg.laplacian() for sg in mp.matchings]
+    fault_rows = []
+    meas_faulted = {
+        r["p_drop"]: r for r in (meas or {}).get("faulted", [])
+    }
+    if meas is not None:
+        meas_faulted[0.0] = meas["sequential"]
+    for pd in (0.0, 0.1, 0.3):
+        p_eff = effective_activation_probs(mp, pd)
+        row = dict(
+            cb=MEASURED_CB, p_drop=pd,
+            rho_faulted=round(float(exact_rho(lap, p_eff, mp.alpha)), 6),
+            comm_units_issued=round(float(mp.expected_comm_units), 4),
+            expected_surviving_exchanges=round(float(p_eff.sum()), 4),
+        )
+        mrow = meas_faulted.get(pd)
+        row["measured_step_ms"] = (
+            mrow["measured_step_ms"] if mrow else ""
+        )
+        fault_rows.append(row)
+    rho_seq = [r["rho_faulted"] for r in fault_rows]
+    checks.append((
+        f"faults: rho monotone in p_drop {rho_seq} and < 1 throughout",
+        all(a <= b + 1e-12 for a, b in zip(rho_seq, rho_seq[1:]))
+        and all(r < 1.0 for r in rho_seq),
+    ))
+    checks.append((
+        "faults: issued comm units independent of p_drop (drops gate "
+        "deltas, not exchanges)",
+        len({r["comm_units_issued"] for r in fault_rows}) == 1,
+    ))
+
     # measured cross-checks: directional consistency only — wall-clock
     # magnitudes are machine-dependent and stay out of the --compare gate
     if meas is not None:
@@ -413,6 +514,7 @@ def run(out_dir: str = RESULTS_DIR, measured: bool | None = None):
                 per_node=rows,
                 step_time=step_rows,
                 fsdp=fsdp_rows,
+                faults=fault_rows,
                 measured=meas,
                 checks=[dict(name=n, ok=bool(ok)) for n, ok in checks],
             ),

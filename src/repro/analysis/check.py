@@ -24,7 +24,16 @@ jaxpr — nothing executes, nothing is allocated — and checks:
 * above the jaxpr: Theorem 2's convergence condition for the plan —
   exact rho = ||E[W'W] - J||_2 < 1, expectation-graph connectivity,
   sampler agreement (``repro.analysis.schedule``), and optionally the
-  committed spectral CSV (``--spectral-csv``).
+  committed spectral CSV (``--spectral-csv``),
+* with ``--faults``: the degraded-mode lanes (``docs/fault_model.md``)
+  — every gossiping strategy re-traced with the fault-injection
+  ``faulted=True`` step builders (per-node degradation gate rows) and
+  held to the SAME collective-inventory, matching, dtype, and byte
+  contracts (a dropped exchange still issues its ppermute; only the
+  delta is gated), plus the degraded spectral gate
+  (``check_faulted_spectral`` at ``--p-drop``) and the numeric
+  doubly-stochastic check on sampled faulted mixing matrices
+  (``check_degraded_mixing``).
 
 ``--skip-steps`` elides the step tracing for kernel/schedule-only runs.
 Emits a JSON report on stdout (progress on stderr). ``--strict`` exits
@@ -87,6 +96,17 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument(
         "--skip-steps", action="store_true",
         help="skip the step tracing (kernel/schedule checks only)",
+    )
+    ap.add_argument(
+        "--faults", action="store_true",
+        help="add the fault-injection lanes: faulted step traces "
+        "(per-node degradation gates) checked against the same "
+        "collective/byte contracts, plus the degraded spectral gate "
+        "and doubly-stochastic mixing check (docs/fault_model.md)",
+    )
+    ap.add_argument(
+        "--p-drop", type=float, default=0.3,
+        help="link-drop probability the --faults lanes verify at",
     )
     ap.add_argument(
         "--spectral-csv", default="",
@@ -220,6 +240,14 @@ def main(argv=None) -> int:
         sviols += schedule_checks.check_spectral_csv(
             args.spectral_csv, where="schedule/csv"
         )
+    if args.faults:
+        _log(f"  degraded-mode gates at p_drop={args.p_drop:g}")
+        sviols += schedule_checks.check_faulted_spectral(
+            plan, args.p_drop, where="schedule/faulted"
+        )
+        sviols += schedule_checks.check_degraded_mixing(
+            plan, p_drop=args.p_drop, where="schedule/degraded-mixing"
+        )
     report["schedule"]["violations"] = [v.to_json() for v in sviols]
     all_violations.extend(sviols)
     _log(f"  schedule: {len(sviols)} violations")
@@ -268,6 +296,9 @@ def main(argv=None) -> int:
 
     abs_local = jax.eval_shape(lambda: model.init(jax.random.key(0)))
     bits = jnp.zeros((plan.num_matchings,), jnp.float32)
+    # faulted lanes trace with the per-node effective-row shape the
+    # fault schedule hands the runtime (activation x link gate)
+    bits_f = jnp.zeros((args.nodes, plan.num_matchings), jnp.float32)
     B, S = args.batch_per_node, args.seq
 
     def abs_batch(nodes):
@@ -288,11 +319,20 @@ def main(argv=None) -> int:
     bplan_r = dt.param_bucket_plan(model)
     leaf_bytes = bytes_model.tree_storage_bytes(abs_local)
 
-    for mode in REPLICATED_MODES:
+    # faulted lanes: the same strategies re-traced with per-node
+    # degradation gates — every collective/byte contract must hold
+    # unchanged, because a dropped exchange still issues its ppermute
+    # (only the consensus delta is gated)
+    rep_variants = [(m, False) for m in REPLICATED_MODES]
+    if args.faults:
+        rep_variants += [(m, True) for m in REPLICATED_MODES if m != "none"]
+    for mode, f_lane in rep_variants:
         if not want(mode):
             continue
-        kwargs = dict(gossip_mode=mode)
-        step_args = (params_r, opt_r, batch_r, bits)
+        label = f"replicated/{mode}" + ("+faults" if f_lane else "")
+        kwargs = dict(gossip_mode=mode, faulted=f_lane)
+        lane_bits = bits_f if f_lane else bits
+        step_args = (params_r, opt_r, batch_r, lane_bits)
         if mode == "static":
             kwargs["active"] = tuple(range(plan.num_matchings))
         if mode == "overlap":
@@ -300,19 +340,19 @@ def main(argv=None) -> int:
             gstate = jax.eval_shape(
                 lambda: dt.init_gossip_state(plan, spec_r, bplan_r)
             )
-            step_args = (params_r, opt_r, gstate, batch_r, bits)
+            step_args = (params_r, opt_r, gstate, batch_r, lane_bits)
         step = dt.make_train_step(model, opt, plan, spec_r, **kwargs)
         closed = to_closed_jaxpr(step, *step_args)
         records = collect(closed)
-        viols = checks.check_collective_axes(records, where=f"replicated/{mode}")
-        viols += checks.check_dtypes(closed, where=f"replicated/{mode}")
+        viols = checks.check_collective_axes(records, where=label)
+        viols += checks.check_dtypes(closed, where=label)
         if mode == "none":
             for r in records:
                 if r.kind == "ppermute":
                     viols.append(checks.Violation(
                         "unexpected-collective",
                         "ppermute traced in the no-gossip step",
-                        f"replicated/{mode}",
+                        label,
                     ))
         else:
             viols += checks.check_ppermutes(
@@ -321,7 +361,7 @@ def main(argv=None) -> int:
                 node_axes=spec_r.node_axes,
                 planned_pairs=planned_pairs,
                 expect_all_planned=True,
-                where=f"replicated/{mode}",
+                where=label,
             )
             # per-matching traffic: storage-dtype leaves in-step
             # (masked/static), fp32 buckets one step delayed (overlap)
@@ -333,9 +373,9 @@ def main(argv=None) -> int:
             for perm, total in ppermute_totals(records).items():
                 viols += checks.check_within(
                     "replicated per_matching bytes", total, want_bytes,
-                    where=f"replicated/{mode}",
+                    where=label,
                 )
-        record_step(f"replicated/{mode}", closed, records, viols)
+        record_step(label, closed, records, viols)
 
     # -- fsdp runtime: layouts x modes ---------------------------------------
     _log(f"fsdp runtime: nodes={args.nodes} shard={args.shard}")
@@ -389,19 +429,24 @@ def main(argv=None) -> int:
         layout = layouts[lname]
         ps = jax.eval_shape(lambda: fsdp.init_fsdp_params(model, layout, seed=0))
         st = jax.eval_shape(lambda: fsdp.init_fsdp_opt_state(opt, layout))
-        for mode in FSDP_MODES:
+        fsdp_variants = [(m, False) for m in FSDP_MODES]
+        if args.faults:
+            fsdp_variants += [(m, True) for m in FSDP_MODES if m != "none"]
+        for mode, f_lane in fsdp_variants:
             if not want(mode):
                 continue
-            label = f"fsdp/{lname}/{mode}"
+            label = f"fsdp/{lname}/{mode}" + ("+faults" if f_lane else "")
             step = fsdp.make_fsdp_train_step(
-                model, opt, plan, spec_f, layout, gossip_mode=mode
+                model, opt, plan, spec_f, layout, gossip_mode=mode,
+                faulted=f_lane,
             )
-            step_args = (ps, st, batch_f, bits)
+            lane_bits = bits_f if f_lane else bits
+            step_args = (ps, st, batch_f, lane_bits)
             if mode == "overlap":
                 gstate = jax.eval_shape(
                     lambda: fsdp.init_fsdp_gossip_state(layout)
                 )
-                step_args = (ps, st, gstate, batch_f, bits)
+                step_args = (ps, st, gstate, batch_f, lane_bits)
             closed = to_closed_jaxpr(step, *step_args)
             records = collect(closed)
             viols = checks.check_collective_axes(records, where=label)

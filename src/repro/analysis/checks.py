@@ -73,6 +73,18 @@ Schedule-level names (``repro.analysis.schedule``, Theorem 2):
                                  from the exact expectation
 ``spectral-csv-mismatch``        committed spectral_norm_vs_budget.csv
                                  not reproducible by today's planner
+
+Degraded-mode names (``--faults`` lanes, ``docs/fault_model.md``):
+
+``faulted-support-disconnected`` at the checked p_drop the union of
+                                 matchings with p_eff > 0 is
+                                 disconnected (rho >= 1 necessarily)
+``faulted-rho-not-contractive``  exact rho at p_eff = p * (1 - p_drop)
+                                 is >= 1 (Theorem 2 fails under faults)
+``degraded-w-not-doubly-stochastic`` a sampled faulted step's effective
+                                 mixing matrix is asymmetric or leaks
+                                 row/column mass — the drop gates are
+                                 not symmetric across link endpoints
 """
 
 from __future__ import annotations

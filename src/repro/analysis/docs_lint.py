@@ -47,6 +47,7 @@ DOC_FILES = (
     "docs/kernels.md",
     "docs/static_analysis.md",
     "docs/observability.md",
+    "docs/fault_model.md",
 )
 
 # Flags of tools that are not ours but legitimately appear in docs

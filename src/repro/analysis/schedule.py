@@ -21,7 +21,19 @@ independent activations) and verify, returning
 * :func:`check_spectral_csv` — the committed
   ``benchmarks/results/spectral_norm_vs_budget.csv`` re-derives from
   today's planner (``spectral-csv-mismatch``): the figure-3 artifact is
-  only citable while the code still produces it.
+  only citable while the code still produces it;
+* :func:`check_faulted_spectral` — Theorem 2 re-verified under
+  injected link drops (``docs/fault_model.md``): activation Bernoullis
+  rescale to p_eff = p * (1 - p_drop) — exact, not approximate, because
+  same-matching edge Laplacians annihilate — and the degraded plan must
+  still contract (``faulted-support-disconnected``,
+  ``faulted-rho-not-contractive``);
+* :func:`check_degraded_mixing` — the fault schedule's per-node gates
+  actually preserve the mixing invariant: every sampled faulted step's
+  effective W is symmetric and doubly stochastic
+  (``degraded-w-not-doubly-stochastic``), i.e. a dropped exchange
+  renormalizes self-weight at BOTH endpoints instead of leaking
+  consensus mass.
 
 Pure numpy — importable without jax (the analysis package guarantee).
 """
@@ -36,7 +48,9 @@ from repro.analysis.checks import Violation
 __all__ = [
     "CSV_GRAPHS",
     "SPECTRAL_CSV",
+    "check_degraded_mixing",
     "check_empirical_rho",
+    "check_faulted_spectral",
     "check_plan_spectral",
     "check_spectral_csv",
 ]
@@ -142,6 +156,100 @@ def check_empirical_rho(
             "plan's activation distribution",
             where,
         )]
+    return []
+
+
+def check_faulted_spectral(plan, p_drop: float, *,
+                           where: str = "plan") -> list:
+    """Theorem 2 under injected link drops.
+
+    Rescales the plan's activation Bernoullis to the faulted
+    ``p_eff = p * (1 - p_drop)`` (exact at matching granularity:
+    same-matching edges have vertex-disjoint supports, so their
+    Laplacian cross terms in E[W'W] vanish — ``docs/fault_model.md``)
+    and re-runs the contraction gate on the degraded distribution. This
+    is the analysis-side mirror of ``repro.faults.verify_degraded_plan``
+    / the driver's ``--strict-faults``: a drop rate that disconnects the
+    effective support or pushes rho to 1 means the faulted run can no
+    longer contract its consensus error, no matter the step count.
+    """
+    from repro.core.matcha import effective_activation_probs
+    from repro.core.mixing import exact_rho, expectation_support_connected
+
+    out = []
+    p_eff = effective_activation_probs(plan, p_drop)
+    laplacians = _plan_laplacians(plan)
+    if not expectation_support_connected(laplacians, p_eff):
+        out.append(Violation(
+            "faulted-support-disconnected",
+            f"at p_drop = {p_drop:g} the union of matchings with "
+            "p_eff > 0 is disconnected — the degraded consensus error "
+            "cannot contract (rho >= 1); lower the drop rate or raise "
+            "the communication budget",
+            where,
+        ))
+    rho = exact_rho(laplacians, p_eff, plan.alpha)
+    if rho >= 1.0 - 1e-9:
+        out.append(Violation(
+            "faulted-rho-not-contractive",
+            f"exact rho under p_drop = {p_drop:g} is {rho:.6f} >= 1: "
+            "Theorem 2's convergence condition fails for the degraded "
+            "plan",
+            where,
+        ))
+    return out
+
+
+def check_degraded_mixing(
+    plan,
+    *,
+    p_drop: float = 0.3,
+    num_iterations: int = 50,
+    seed: int = 0,
+    tol: float = 1e-9,
+    where: str = "plan",
+) -> list:
+    """Faulted steps keep the mixing invariant, numerically.
+
+    Builds a seeded :class:`repro.faults.FaultSchedule`, samples
+    ``num_iterations`` activation rounds with the production sampler,
+    and assembles every step's *effective* mixing matrix from the
+    per-node gate rows the runtime would hand the gossip step
+    (``repro.faults.effective_mixing_matrix``). Each W must be
+    symmetric with unit row/column sums: the degradation rule is
+    self-weight renormalization at BOTH endpoints of a dropped link, so
+    any asymmetry or leaked consensus mass here means the fault model
+    (or a mutation of its drop-propagation) broke doubly stochastic
+    mixing — the property Theorem 2's contraction argument rests on.
+    """
+    import numpy as np
+
+    from repro.faults import (
+        FaultSpec, effective_mixing_matrix, make_fault_schedule,
+    )
+
+    spec = FaultSpec(p_drop=p_drop, seed=seed)
+    sched = make_fault_schedule(plan, num_iterations, spec)
+    topo = plan.schedule(num_iterations, seed=seed)
+    m = sched.num_nodes
+    ones = np.ones(m)
+    for k in range(num_iterations):
+        bits = sched.node_bits(topo.activations[k], k)   # (nodes, M)
+        W = effective_mixing_matrix(
+            np.asarray(plan.permutations), plan.alpha, bits
+        )
+        asym = float(np.max(np.abs(W - W.T)))
+        row_err = float(np.max(np.abs(W @ ones - ones)))
+        if asym > tol or row_err > tol:
+            return [Violation(
+                "degraded-w-not-doubly-stochastic",
+                f"faulted step {k} (p_drop={p_drop:g}, seed {seed}): "
+                f"effective W has asymmetry {asym:.2e} / row-sum error "
+                f"{row_err:.2e} (> {tol:g}) — a dropped exchange is not "
+                "renormalizing self-weight symmetrically at both "
+                "endpoints, so consensus mass leaks",
+                where,
+            )]
     return []
 
 

@@ -5,12 +5,27 @@ msgpack sidecar describing the tree structure and step metadata. In a
 decentralized run each node has its OWN model replica, so checkpoints
 are stored per node (``node_00.npz`` ...); ``save_run``/``restore_run``
 handle the stacked (node-axis-leading) layout the trainer uses.
+
+Crash safety (``docs/fault_model.md``): every file is written via
+temp-file + fsync + atomic rename, never in place, and the sidecar
+carries the payload's CRC32 + byte size so ``restore`` detects torn or
+truncated files and raises the named :class:`CheckpointCorruptError`
+instead of loading garbage (or crashing opaquely inside ``np.load``).
+``save_run`` keeps the flat single-checkpoint directory layout;
+``save_run_step`` adds the crash-safe *history* layout — one
+``step_XXXXXXXX/`` subdirectory per checkpoint, ``ckpt.json`` written
+last as the completeness marker — and ``find_resumable`` walks it
+newest-first, skipping incomplete/corrupt entries, which is what
+``launch.train --resume auto`` resolves through.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import shutil
+import zlib
+from io import BytesIO
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -18,6 +33,14 @@ import jax.numpy as jnp
 import ml_dtypes
 import msgpack
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint file is torn, truncated, or fails its checksum.
+
+    Actionable by construction: the message names the offending file
+    and the remedy (delete/ignore this checkpoint and resume from an
+    earlier complete one — ``find_resumable`` does exactly that)."""
 
 # dtypes numpy's npz format cannot store natively: saved as bit-views
 _VIEW_DTYPES = {
@@ -76,24 +99,83 @@ def _rebuild(struct: Any, flat: Dict[str, np.ndarray], prefix: str = "") -> PyTr
     return jnp.asarray(arr)
 
 
+def _atomic_write(path: str, data: bytes) -> None:
+    """tmp file in the destination directory + fsync + atomic rename:
+    after ``os.replace`` the file is either the complete new payload or
+    (on a crash before the rename) absent/old — never torn."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
 def save(path: str, tree: PyTree, *, metadata: Optional[dict] = None) -> None:
+    """Atomic checkpoint write: the ``.npz`` payload is serialized in
+    memory, checksummed, and renamed into place; the sidecar (structure,
+    metadata, payload CRC32 + size) follows, also atomically. A crash at
+    any point leaves no torn file — at worst a stale payload/sidecar
+    pair, which the checksum check in :func:`restore` rejects."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(jax.device_get(tree))
-    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    buf = BytesIO()
+    np.savez(buf, **flat)
+    payload = buf.getvalue()
+    _atomic_write(
+        path if path.endswith(".npz") else path + ".npz", payload
+    )
     side = {
         "structure": _structure(tree),
         "metadata": metadata or {},
+        "npz_crc32": zlib.crc32(payload) & 0xFFFFFFFF,
+        "npz_size": len(payload),
     }
-    with open(_sidecar(path), "wb") as f:
-        f.write(msgpack.packb(side, use_bin_type=True))
+    _atomic_write(_sidecar(path), msgpack.packb(side, use_bin_type=True))
 
 
 def restore(path: str) -> Tuple[PyTree, dict]:
-    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    """Load one checkpoint, verifying the sidecar checksum when present
+    (checkpoints written before the checksum existed still load). Torn,
+    truncated, or mismatched files raise :class:`CheckpointCorruptError`
+    naming the file."""
+    npz_path = path if path.endswith(".npz") else path + ".npz"
     with open(_sidecar(path), "rb") as f:
         side = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
-    flat = {k: npz[k] for k in npz.files}
-    return _rebuild(side["structure"], flat), side["metadata"]
+    with open(npz_path, "rb") as f:
+        payload = f.read()
+    want_size = side.get("npz_size")
+    want_crc = side.get("npz_crc32")
+    if want_size is not None and len(payload) != int(want_size):
+        raise CheckpointCorruptError(
+            f"checkpoint file {npz_path!r} is {len(payload)} bytes but its "
+            f"sidecar records {want_size} — the file is truncated or torn; "
+            "delete this checkpoint and resume from an earlier complete one"
+        )
+    if want_crc is not None and (
+        zlib.crc32(payload) & 0xFFFFFFFF
+    ) != int(want_crc):
+        raise CheckpointCorruptError(
+            f"checkpoint file {npz_path!r} fails its CRC32 content check — "
+            "the file is corrupt; delete this checkpoint and resume from "
+            "an earlier complete one"
+        )
+    try:
+        npz = np.load(BytesIO(payload))
+        flat = {k: npz[k] for k in npz.files}
+        return _rebuild(side["structure"], flat), side["metadata"]
+    except CheckpointCorruptError:
+        raise
+    except Exception as exc:   # torn pre-checksum files: BadZipFile etc.
+        raise CheckpointCorruptError(
+            f"checkpoint file {npz_path!r} cannot be parsed ({exc}) — the "
+            "file is torn or corrupt; delete this checkpoint and resume "
+            "from an earlier complete one"
+        ) from exc
 
 
 def _sidecar(path: str) -> str:
@@ -139,8 +221,12 @@ def save_run(
         "num_nodes": num_nodes,
     }
     info.update(extra or {})
-    with open(os.path.join(directory, "ckpt.json"), "w") as f:
-        json.dump(info, f)
+    # ckpt.json is the completeness marker: written last, atomically —
+    # a directory without a (complete) ckpt.json is an aborted save
+    _atomic_write(
+        os.path.join(directory, "ckpt.json"),
+        json.dumps(info).encode("utf-8"),
+    )
 
 
 def _node_files(directory: str, info: dict) -> list:
@@ -173,7 +259,14 @@ def _node_files(directory: str, info: dict) -> list:
 
 
 def restore_run(directory: str) -> Tuple[PyTree, PyTree, int]:
-    with open(os.path.join(directory, "ckpt.json")) as f:
+    marker = os.path.join(directory, "ckpt.json")
+    if not os.path.exists(marker):
+        # history root (save_run_step layout): resolve to the newest
+        # complete step directory instead of failing on the root itself
+        resolved = find_resumable(directory)
+        if resolved is not None and resolved != directory:
+            return restore_run(resolved)
+    with open(marker) as f:
         info = json.load(f)
     if info["per_node_files"]:
         nodes = _node_files(directory, info)
@@ -190,3 +283,101 @@ def restore_run(directory: str) -> Tuple[PyTree, PyTree, int]:
                 )
     opt_state, _ = restore(os.path.join(directory, "opt_state"))
     return params, opt_state, info["step"]
+
+
+# ---------------------------------------------------------------------------
+# Crash-safe history layout (one step_XXXXXXXX/ subdir per checkpoint)
+# ---------------------------------------------------------------------------
+_STEP_DIR = re.compile(r"step_(\d{8})")
+
+
+def step_dir(root: str, step: int) -> str:
+    """Path of the history entry for ``step`` under ``root``."""
+    return os.path.join(root, f"step_{int(step):08d}")
+
+
+def save_run_step(
+    root: str,
+    stacked_params: PyTree,
+    opt_state: PyTree,
+    *,
+    step: int,
+    per_node_files: bool = False,
+    extra: Optional[dict] = None,
+    keep_last: int = 3,
+) -> str:
+    """Crash-safe periodic checkpoint: ``save_run`` into a fresh
+    ``step_XXXXXXXX/`` subdirectory (never overwriting the previous
+    checkpoint in place), then prune history beyond ``keep_last``
+    complete entries. A crash at ANY point during the save leaves every
+    earlier step directory untouched and restorable — the half-written
+    directory simply lacks its ckpt.json completeness marker (or fails
+    its checksums) and is skipped by :func:`find_resumable`.
+    Returns the step directory path."""
+    d = step_dir(root, step)
+    save_run(
+        d, stacked_params, opt_state,
+        step=step, per_node_files=per_node_files, extra=extra,
+    )
+    if keep_last > 0:
+        steps = sorted(_history_steps(root))
+        for s in steps[:-keep_last]:
+            shutil.rmtree(step_dir(root, s), ignore_errors=True)
+    return d
+
+
+def _history_steps(root: str) -> list:
+    out = []
+    try:
+        entries = os.listdir(root)
+    except FileNotFoundError:
+        return out
+    for name in entries:
+        m = _STEP_DIR.fullmatch(name)
+        if m and os.path.isdir(os.path.join(root, name)):
+            out.append(int(m.group(1)))
+    return out
+
+
+def verify_run(directory: str) -> dict:
+    """Full integrity check of one checkpoint directory: ckpt.json
+    present and parseable, every expected file loads and passes its
+    checksum. Raises (``CheckpointCorruptError`` / ``ValueError`` /
+    ``OSError``) on the first problem; returns the ckpt.json info on
+    success."""
+    with open(os.path.join(directory, "ckpt.json")) as f:
+        info = json.load(f)
+    if info["per_node_files"]:
+        for fname in _node_files(directory, info):
+            restore(os.path.join(directory, fname))
+    else:
+        restore(os.path.join(directory, "params"))
+    restore(os.path.join(directory, "opt_state"))
+    return info
+
+
+def find_resumable(root: str) -> Optional[str]:
+    """Newest complete, checksum-valid checkpoint under ``root``.
+
+    ``root`` may be a flat ``save_run`` directory (returned iff it
+    verifies) or a ``save_run_step`` history root (entries walked
+    newest-first; torn or incomplete ones — e.g. from a crash
+    mid-checkpoint — are skipped). Returns ``None`` when nothing under
+    ``root`` is restorable. This is the resolver behind
+    ``launch.train --resume auto``."""
+    if not os.path.isdir(root):
+        return None
+    if os.path.exists(os.path.join(root, "ckpt.json")):
+        try:
+            verify_run(root)
+            return root
+        except Exception:
+            return None
+    for s in sorted(_history_steps(root), reverse=True):
+        d = step_dir(root, s)
+        try:
+            verify_run(d)
+            return d
+        except Exception:
+            continue
+    return None

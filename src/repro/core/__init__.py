@@ -32,6 +32,7 @@ from repro.core.graphs import (
 )
 from repro.core.matcha import (
     MatchaPlan,
+    effective_activation_probs,
     plan_matcha,
     plan_periodic,
     plan_vanilla,
@@ -69,6 +70,7 @@ __all__ = [
     "analytic_expected_gram",
     "check_doubly_stochastic",
     "complete_graph",
+    "effective_activation_probs",
     "empirical_rho",
     "erdos_renyi_graph",
     "exact_expected_gram",

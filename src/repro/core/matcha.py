@@ -51,6 +51,20 @@ class MatchaPlan:
         # schedule row ppermutes with one of these permutations, so a
         # non-involution here would silently corrupt the mixing step.
         validate_permutations(self.permutations, self.graph.m)
+        # Edge validation of the activation probabilities (NaN-safe:
+        # a poisoned optimizer output must fail here with a clear
+        # message, not deep inside the 2^M spectral enumeration).
+        p = np.asarray(self.probabilities, dtype=float)
+        if p.shape != (len(self.matchings),):
+            raise ValueError(
+                f"probabilities shape {p.shape} does not match the "
+                f"{len(self.matchings)} matchings"
+            )
+        if not np.all((p >= 0.0) & (p <= 1.0)):
+            raise ValueError(
+                "activation probabilities must be finite and lie in "
+                f"[0, 1]; got {p!r}"
+            )
 
     @property
     def num_matchings(self) -> int:
@@ -124,6 +138,32 @@ def verify_spectral(plan: MatchaPlan, *, rho_tol: float = 1e-6) -> float:
     return rho
 
 
+def effective_activation_probs(plan: MatchaPlan, fault_model) -> np.ndarray:
+    """Activation probabilities under i.i.d. per-edge link drops.
+
+    ``fault_model`` is anything with a ``p_drop`` attribute (e.g.
+    ``repro.faults.FaultSpec``) or a bare drop probability. Returns
+    ``p_eff_j = p_j * (1 - p_drop)``.
+
+    This matching-granularity rescaling is *exact* for the spectral
+    analysis, not an approximation: edges within one matching have
+    vertex-disjoint supports, so their Laplacians annihilate each other
+    (``L_e L_f = 0`` for ``e != f`` in the same matching) and every
+    same-matching cross term in ``E[W'W]`` vanishes — the expectation
+    under per-edge Bernoulli(1 - p_drop) survival equals the
+    independent-matching closed form evaluated at ``p_eff`` (derivation
+    in ``docs/fault_model.md``). Feed the result to ``exact_rho`` /
+    ``verify`` paths to gate Theorem 2 under faults.
+    """
+    p_drop = getattr(fault_model, "p_drop", fault_model)
+    pd = float(p_drop)
+    if not np.isfinite(pd) or not 0.0 <= pd <= 1.0:
+        raise ValueError(
+            f"p_drop must be a finite probability in [0, 1], got {p_drop!r}"
+        )
+    return np.asarray(plan.probabilities, dtype=float) * (1.0 - pd)
+
+
 def plan_matcha(
     graph: Graph,
     comm_budget: float,
@@ -132,6 +172,15 @@ def plan_matcha(
     seed: int = 0,
 ) -> MatchaPlan:
     """Run MATCHA Steps 1-3 for ``graph`` at communication budget CB."""
+    cb = float(comm_budget)
+    # NaN-safe edge validation (`not 0 < cb <= 1` catches NaN too): the
+    # budget feeds the activation-probability optimizer, and a bad value
+    # would otherwise surface as an opaque spectral failure much later
+    if not 0.0 < cb <= 1.0:
+        raise ValueError(
+            "comm_budget must be a finite fraction in (0, 1] of the "
+            f"vanilla per-iteration communication, got {comm_budget!r}"
+        )
     if not graph.is_connected():
         raise ValueError("MATCHA requires a connected base graph (Theorem 2)")
     matchings = matching_decomposition(graph)

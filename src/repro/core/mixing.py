@@ -95,8 +95,13 @@ def exact_expected_gram(
     M = len(laplacians)
     if M != p.shape[0]:
         raise ValueError("probabilities must align with laplacians")
-    if np.any(p < -1e-12) or np.any(p > 1 + 1e-12):
-        raise ValueError("activation probabilities must lie in [0, 1]")
+    # NaN-safe range check: `p < lo or p > hi` is False for NaN, which
+    # would let a poisoned probability vector reach the 2^M enumeration
+    if not np.all((p >= -1e-12) & (p <= 1 + 1e-12)):
+        raise ValueError(
+            "activation probabilities must be finite and lie in [0, 1]; "
+            f"got {p!r}"
+        )
     m = laplacians[0].shape[0]
     if M > max_enumerate:
         L_bar = sum(pj * Lj for pj, Lj in zip(p, laplacians))

@@ -311,6 +311,7 @@ def make_train_step(
     active: Sequence[int] = (),
     grad_clip: float = 0.0,
     bucket_plan: Optional[bucketing.BucketPlan] = None,
+    faulted: bool = False,
 ):
     """Build the jitted decentralized step.
 
@@ -329,6 +330,17 @@ def make_train_step(
     (nodes, per_node_batch, ...); ``bits`` is the (M,) float activation
     row of the a-priori schedule (ignored for "static"/"none").
     ``losses``/``metrics`` come back per node, shape (nodes,).
+
+    ``faulted=True`` builds the link-failure-tolerant variant: ``bits``
+    becomes the ``(nodes, M)`` *per-node effective* activation array
+    (``repro.faults.FaultSchedule.node_bits`` — activation row times the
+    step's edge-symmetric link-survival gates), sharded over the node
+    axes and stripped to each node's own (M,) row inside the body. The
+    gossip arithmetic is unchanged — dropped exchanges degrade to
+    self-weight renormalization because both endpoints carry the same
+    gate — so with all-ones gates the faulted step computes bit-identical
+    results to the default one. ``faulted=False`` (default) traces
+    exactly today's executable (the zero-fault parity contract).
 
     Overlap body order (one-step-delayed gossip, Wang et al. 2024):
     first apply the *previous* step's consensus correction
@@ -372,17 +384,24 @@ def make_train_step(
         # strip the (local size 1) node dim: per-node trees
         p = jax.tree.map(lambda a: a[0], params)
         s = jax.tree.map(lambda a: a[0], opt_state)
+        if faulted:
+            bits = bits[0]            # (nodes, M) -> this node's (M,) row
         p, s, loss, metrics = sgd_half(p, s, batch)
         with jax.named_scope("gossip"):
             if gossip_mode == "masked":
                 p = mix_matchings_masked(p, alpha, perms, bits, info)
             elif gossip_mode == "static":
-                p = mix_matchings(p, alpha, perms, active, info)
+                p = mix_matchings(
+                    p, alpha, perms, active, info,
+                    gate_bits=bits if faulted else None,
+                )
         return expand(p), expand(s), loss[None], expand(metrics)
 
     def body_overlap(params, opt_state, gstate, batch, bits):
         p = jax.tree.map(lambda a: a[0], params)
         s = jax.tree.map(lambda a: a[0], opt_state)
+        if faulted:
+            bits = bits[0]            # (nodes, M) -> this node's (M,) row
         # 1. land the delayed correction from the in-flight exchange
         with jax.named_scope("gossip_apply"):
             p = _apply_delayed(
@@ -401,12 +420,17 @@ def make_train_step(
         new_state = GossipState(delta=tuple(a[None] for a in new_delta))
         return expand(p), expand(s), new_state, loss[None], expand(metrics)
 
+    # faulted steps take per-node (nodes, M) effective bits, sharded
+    # over the node axes; default steps keep the replicated (M,) row
+    bits_spec = P(nodes_ax) if faulted else P()
+
     if gossip_mode == "overlap":
         gspecs = gossip_state_pspecs(spec, bplan)
         stepped = jax.shard_map(
             body_overlap,
             mesh=mesh,
-            in_specs=(P(nodes_ax), P(nodes_ax), gspecs, P(nodes_ax), P()),
+            in_specs=(P(nodes_ax), P(nodes_ax), gspecs, P(nodes_ax),
+                      bits_spec),
             out_specs=(
                 P(nodes_ax), P(nodes_ax), gspecs, P(nodes_ax), P(nodes_ax),
             ),
@@ -417,7 +441,7 @@ def make_train_step(
     stepped = jax.shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(nodes_ax), P(nodes_ax), P(nodes_ax), P()),
+        in_specs=(P(nodes_ax), P(nodes_ax), P(nodes_ax), bits_spec),
         out_specs=(P(nodes_ax), P(nodes_ax), P(nodes_ax), P(nodes_ax)),
         axis_names=set(spec.node_axes),
     )
@@ -437,6 +461,7 @@ def make_phased_train_step(
     gossip_mode: str = "masked",
     active: Sequence[int] = (),
     grad_clip: float = 0.0,
+    faulted: bool = False,
 ):
     """Telemetry variant of :func:`make_train_step`: the same update,
     split into separately jitted + fenced phase executables so a host
@@ -504,10 +529,15 @@ def make_phased_train_step(
 
     def gossip_body(params, bits):
         p = jax.tree.map(lambda a: a[0], params)
+        if faulted:
+            bits = bits[0]            # (nodes, M) -> this node's (M,) row
         if gossip_mode == "masked":
             p = mix_matchings_masked(p, alpha, perms, bits, info)
         else:
-            p = mix_matchings(p, alpha, perms, active, info)
+            p = mix_matchings(
+                p, alpha, perms, active, info,
+                gate_bits=bits if faulted else None,
+            )
         return expand(p)
 
     fwd_bwd = jax.jit(jax.shard_map(
@@ -526,7 +556,7 @@ def make_phased_train_step(
     if gossip_mode != "none":
         gossip = jax.jit(jax.shard_map(
             gossip_body, mesh=mesh,
-            in_specs=(P(nodes_ax), P()),
+            in_specs=(P(nodes_ax), P(nodes_ax) if faulted else P()),
             out_specs=P(nodes_ax),
             axis_names=manual,
         ))

@@ -764,6 +764,7 @@ def make_fsdp_train_step(
     *,
     gossip_mode: str = "sequential",
     grad_clip: float = 0.0,
+    faulted: bool = False,
 ):
     """Build the jitted sharded-replica decentralized step.
 
@@ -795,6 +796,14 @@ def make_fsdp_train_step(
     (split over the shard axis in-step); ``bits`` the (M,) activation
     row. ``losses``/``metrics`` come back ``(nodes, S)`` with identical
     columns (pmean'd over the shard axis).
+
+    ``faulted=True`` is the link-failure-tolerant variant (mirroring
+    ``decen_train.make_train_step``): ``bits`` becomes the per-node
+    ``(nodes, M)`` effective activation array, sharded over the node
+    axes (replicated over "shard" — every shard of a node sees the same
+    gates, so the whole replica degrades coherently) and stripped to the
+    node's own (M,) row inside the body. Gossip arithmetic is unchanged;
+    all-ones gates reproduce the default step bit-for-bit.
     """
     if gossip_mode == "masked":            # replicated-runtime spelling
         gossip_mode = "sequential"
@@ -863,6 +872,8 @@ def make_fsdp_train_step(
     def body(shards, opt_state, batch, bits):
         ps = tuple(a[0, 0] for a in shards)
         s = jax.tree.map(lambda a: a[0, 0], opt_state)
+        if faulted:
+            bits = bits[0]            # (nodes, M) -> this node's (M,) row
         ps, s, loss, metrics = sgd_half(ps, s, batch)
         if gossip_mode == "sequential":
             # masked gossip directly on the bucket shards: the ppermutes
@@ -876,6 +887,8 @@ def make_fsdp_train_step(
     def body_overlap(shards, opt_state, gstate, batch, bits):
         ps = tuple(a[0, 0] for a in shards)
         s = jax.tree.map(lambda a: a[0, 0], opt_state)
+        if faulted:
+            bits = bits[0]            # (nodes, M) -> this node's (M,) row
         # 1. land the delayed correction from the in-flight exchange
         delta = tuple(a[0, 0] for a in gstate.delta)
         target = tuple(x + d for x, d in zip(ps, delta))
@@ -894,13 +907,16 @@ def make_fsdp_train_step(
     batch_spec = P(nodes_ax, "shard")
     opt_spec = fsdp_opt_pspecs(opt, spec, layout)
     ls_spec = P(nodes_ax, "shard")
+    # faulted steps take per-node (nodes, M) effective bits over the
+    # node axes (replicated across "shard"); default keeps the (M,) row
+    bits_spec = P(nodes_ax) if faulted else P()
 
     if gossip_mode == "overlap":
         gspecs = fsdp_gossip_state_pspecs(spec, layout)
         stepped = jax.shard_map(
             body_overlap,
             mesh=mesh,
-            in_specs=(pspec, opt_spec, gspecs, batch_spec, P()),
+            in_specs=(pspec, opt_spec, gspecs, batch_spec, bits_spec),
             out_specs=(pspec, opt_spec, gspecs, ls_spec, ls_spec),
             axis_names=manual,
         )
@@ -909,7 +925,7 @@ def make_fsdp_train_step(
     stepped = jax.shard_map(
         body,
         mesh=mesh,
-        in_specs=(pspec, opt_spec, batch_spec, P()),
+        in_specs=(pspec, opt_spec, batch_spec, bits_spec),
         out_specs=(pspec, opt_spec, ls_spec, ls_spec),
         axis_names=manual,
     )
@@ -926,6 +942,7 @@ def make_phased_fsdp_train_step(
     timer=None,
     gossip_mode: str = "sequential",
     grad_clip: float = 0.0,
+    faulted: bool = False,
 ):
     """Telemetry variant of :func:`make_fsdp_train_step`: the same
     update split into separately jitted + fenced executables —
@@ -1006,6 +1023,8 @@ def make_phased_fsdp_train_step(
 
     def gossip_body(shards, bits):
         ps = tuple(a[0, 0] for a in shards)
+        if faulted:
+            bits = bits[0]            # (nodes, M) -> this node's (M,) row
         ps = mix_matchings_masked(ps, alpha, perms, bits, info)
         return ex2(ps)
 
@@ -1030,7 +1049,7 @@ def make_phased_fsdp_train_step(
     if gossip_mode != "none":
         gossip = jax.jit(jax.shard_map(
             gossip_body, mesh=mesh,
-            in_specs=(pspec, P()),
+            in_specs=(pspec, P(nodes_ax) if faulted else P()),
             out_specs=pspec,
             axis_names=manual,
         ))

@@ -142,28 +142,52 @@ def mix_matchings(
     info: NodeAxisInfo,
     *,
     impl: str = "auto",
+    gate_bits=None,                      # (M,) per-node degradation gates
 ) -> PyTree:
     """Static-activation gossip: x + alpha * sum_{j in active} (pi_j(x) - x).
 
     ``active`` is baked into the executable (one compile per distinct
-    activated subset — the "static" train-step mode)."""
+    activated subset — the "static" train-step mode).
+
+    ``gate_bits`` (optional, traced ``(M,)`` floats in {0, 1}) is the
+    fault-injection degradation path: each active matching's delta is
+    scaled by this node's gate for it. The fault schedule keeps gates
+    symmetric across every matching edge (``gate[u] == gate[v]``), so a
+    dropped exchange degrades to self-weight renormalization — both
+    endpoints keep the weight they would have sent and the effective W
+    stays symmetric and doubly stochastic (``docs/fault_model.md``).
+    ``None`` traces exactly today's un-gated executable."""
     active = _canonical_active(active, int(np.asarray(permutations).shape[0]))
     if not active:
         return local
     name = info.axis_name
+    if gate_bits is not None:
+        _check_bits(gate_bits, int(np.asarray(permutations).shape[0]))
     pair_lists = [_pairs(np.asarray(permutations[j])) for j in active]
     k = float(len(active))
 
     def partner_target(x):
         if not _is_float(x):
             return x
-        acc = None
+        if gate_bits is None:
+            acc = None
+            for j, pairs in zip(active, pair_lists):
+                with jax.named_scope(f"gossip/matching{j}"):
+                    p = jax.lax.ppermute(x, name, pairs).astype(jnp.float32)
+                acc = p if acc is None else acc + p
+            # y with x + alpha*(y - x) == x + alpha * sum_j (partner_j - x)
+            return acc - (k - 1.0) * x.astype(jnp.float32)
+        # degraded path: every active exchange still runs (same
+        # collective inventory), its delta scaled by the node's gate
+        xf = x.astype(jnp.float32)
+        delta = jnp.zeros_like(xf)
         for j, pairs in zip(active, pair_lists):
             with jax.named_scope(f"gossip/matching{j}"):
-                p = jax.lax.ppermute(x, name, pairs).astype(jnp.float32)
-            acc = p if acc is None else acc + p
-        # y with x + alpha*(y - x) == x + alpha * sum_j (partner_j - x)
-        return acc - (k - 1.0) * x.astype(jnp.float32)
+                p = jax.lax.ppermute(x, name, pairs)
+            delta = delta + gate_bits[j].astype(jnp.float32) * (
+                p.astype(jnp.float32) - xf
+            )
+        return xf + delta
 
     targets = jax.tree.map(partner_target, local)
     return ops.gossip_apply(local, targets, float(alpha), impl=impl)
@@ -180,7 +204,14 @@ def mix_matchings_masked(
 ) -> PyTree:
     """Masked gossip: every matching's exchange runs, each delta scaled
     by its (traced) activation bit — one executable for the whole
-    a-priori schedule instead of one per activated subset."""
+    a-priori schedule instead of one per activated subset.
+
+    ``bits`` is this node's (M,) activation row. Fault injection reuses
+    this path unchanged: the faulted step hands each node its *own*
+    effective row (activation * link-survival gate, symmetric across
+    every matching edge), so a dropped exchange zeroes the delta at both
+    endpoints — self-weight renormalization, keeping the effective W
+    symmetric and doubly stochastic (``docs/fault_model.md``)."""
     name = info.axis_name
     num = int(np.asarray(permutations).shape[0])
     _check_bits(bits, num)

@@ -1,0 +1,26 @@
+"""Fault injection + graceful degradation (see ``docs/fault_model.md``).
+
+``repro.faults.model`` is the deterministic fault model (link drops,
+stragglers, downtime, crashes) and its spectral/doubly-stochastic
+oracles; ``repro.faults.retry`` is the bounded-backoff helper the
+driver wraps checkpoint I/O in. Pure numpy — importable without jax.
+"""
+from repro.faults.model import (
+    FaultSchedule,
+    FaultSpec,
+    SimulatedCrash,
+    effective_mixing_matrix,
+    make_fault_schedule,
+    verify_degraded_plan,
+)
+from repro.faults.retry import retry_with_backoff
+
+__all__ = [
+    "FaultSchedule",
+    "FaultSpec",
+    "SimulatedCrash",
+    "effective_mixing_matrix",
+    "make_fault_schedule",
+    "retry_with_backoff",
+    "verify_degraded_plan",
+]

@@ -45,6 +45,20 @@ ratio, modeled bytes), and on exit DIR receives ``events.jsonl``,
 costs dispatch overlap, so traced step times are an upper bound — see
 ``docs/observability.md``.
 
+``--p-drop P`` turns on the fault-injection layer (``repro.faults``):
+a seeded :class:`~repro.faults.FaultSchedule` is declared up front
+(exact reproducibility), each activated matching's link survives with
+probability ``1 - P`` per step, and a dropped exchange degrades to
+self-weight renormalization at BOTH endpoints so the effective mixing
+matrix stays symmetric and doubly stochastic (``docs/fault_model.md``).
+The planner's Theorem 2 gate is re-verified under the faulted
+activation probabilities — a warning by default, a hard error with
+``--strict-faults``. ``--straggler-prob``/``--straggler-units`` add
+per-node straggler delays to the simulated clock; ``--crash-at-step K``
+raises :class:`~repro.faults.SimulatedCrash` after completing step K
+(and any checkpoint due at it), and ``--resume auto`` restarts from the
+newest complete, checksum-valid checkpoint under ``--ckpt-dir``.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch internlm2_1_8b \
       --preset tiny --graph paper8 --nodes 8 --budget 0.5 --steps 100
@@ -105,7 +119,40 @@ def build_parser() -> argparse.ArgumentParser:
                          "segment). Requires --stream-layers")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
-    ap.add_argument("--resume", default="")
+    ap.add_argument("--keep-last", type=int, default=3,
+                    help="checkpoint history entries to keep under "
+                         "--ckpt-dir (step_XXXXXXXX/ subdirectories; "
+                         "0 keeps everything)")
+    ap.add_argument("--resume", default="",
+                    help="checkpoint directory to resume from, or "
+                         "'auto' to resolve the newest complete, "
+                         "checksum-valid checkpoint under --ckpt-dir "
+                         "(torn/corrupt entries are skipped)")
+    # --- fault injection (repro.faults, docs/fault_model.md) ---------
+    ap.add_argument("--p-drop", type=float, default=0.0,
+                    help="per-step probability each activated "
+                         "matching's link drops for a node pair; the "
+                         "dropped exchange degrades to self-weight "
+                         "renormalization at both endpoints")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the a-priori FaultSchedule (same "
+                         "seed => identical injected faults)")
+    ap.add_argument("--straggler-prob", type=float, default=0.0,
+                    help="per-step probability a node straggles, "
+                         "adding --straggler-units to the simulated "
+                         "step time")
+    ap.add_argument("--straggler-units", type=float, default=1.0,
+                    help="simulated delay units a straggling node "
+                         "adds (the paper's clock: 1 unit per "
+                         "activated matching)")
+    ap.add_argument("--crash-at-step", type=int, default=-1,
+                    help="raise SimulatedCrash after completing this "
+                         "step (and any checkpoint due at it); -1 "
+                         "disables")
+    ap.add_argument("--strict-faults", action="store_true",
+                    help="fail (instead of warn) when the injected "
+                         "drop rate breaks Theorem 2: faulted rho >= 1 "
+                         "or disconnected effective support")
     ap.add_argument("--csv", default="")
     ap.add_argument("--non-iid", action="store_true")
     ap.add_argument("--trace", default="", metavar="DIR",
@@ -158,6 +205,10 @@ def main():
     )
     from repro.data.pipeline import DecentralizedBatches
     from repro.dist import decen_train as dt
+    from repro.faults import (
+        FaultSpec, SimulatedCrash, make_fault_schedule,
+        retry_with_backoff, verify_degraded_plan,
+    )
     from repro.dist import fsdp
     from repro.dist import sharding as shd
     from repro.models.transformer import Model
@@ -186,6 +237,39 @@ def main():
     else:
         plan = plan_matcha(graph, args.budget, seed=args.seed)
         schedule = plan.schedule(args.steps, seed=args.seed)
+
+    # --- fault injection (repro.faults) --------------------------------
+    fault_spec = FaultSpec(
+        p_drop=args.p_drop,
+        straggler_prob=args.straggler_prob,
+        straggler_units=args.straggler_units,
+        crash_at_step=args.crash_at_step,
+        seed=args.fault_seed,
+    )
+    fault_sched = None
+    faulted = fault_spec.has_link_faults
+    if not fault_spec.empty:
+        fault_sched = make_fault_schedule(plan, args.steps, fault_spec)
+    if faulted and args.mode in ("matcha", "vanilla"):
+        # Theorem 2 under faults: link drops rescale the activation
+        # Bernoullis to p_eff = p * (1 - p_drop) exactly (same-matching
+        # cross terms vanish — docs/fault_model.md), so the contraction
+        # gate re-runs on the degraded probabilities.
+        rho_f, problems = verify_degraded_plan(plan, fault_spec)
+        if problems and args.strict_faults:
+            raise SystemExit(
+                "faults: --strict-faults: " + "; ".join(problems)
+            )
+        if problems:
+            for msg in problems:
+                print(f"faults: WARNING {msg}")
+        else:
+            print(f"faults: p_drop={args.p_drop:g} keeps the plan "
+                  f"contractive (faulted rho {rho_f:.4f} < 1)")
+    elif faulted:
+        print(f"faults: mode {args.mode} has no independent-Bernoulli "
+              "spectral gate; injecting drops without a rho-under-"
+              "faults guarantee")
 
     if use_fsdp:
         mesh = jax.make_mesh(
@@ -242,15 +326,28 @@ def main():
         params = dt.init_stacked_params(model, spec, seed=args.seed)
         opt_state = dt.init_stacked_opt_state(opt, model, spec)
     start_step = 0
-    if args.resume:
-        # checkpoints are stored gathered (stacked), shard-agnostic
-        r_params, r_opt, start_step = ckpt_lib.restore_run(args.resume)
+    resume_dir = args.resume
+    if resume_dir == "auto":
+        # newest complete, checksum-valid checkpoint under --ckpt-dir
+        # (torn entries from a crash mid-checkpoint are skipped)
+        if not args.ckpt_dir:
+            raise SystemExit("--resume auto requires --ckpt-dir")
+        resume_dir = ckpt_lib.find_resumable(args.ckpt_dir) or ""
+        if not resume_dir:
+            print("resume auto: no restorable checkpoint under "
+                  f"{args.ckpt_dir}; starting fresh")
+    if resume_dir:
+        # checkpoints are stored gathered (stacked), shard-agnostic;
+        # transient read failures retry with bounded backoff
+        r_params, r_opt, start_step = retry_with_backoff(
+            lambda: ckpt_lib.restore_run(resume_dir)
+        )
         if use_fsdp:
             params = fsdp.scatter_params(layout, r_params)
             opt_state = fsdp.scatter_opt_state(layout, opt, r_opt)
         else:
             params, opt_state = r_params, r_opt
-        print(f"resumed from {args.resume} at step {start_step}")
+        print(f"resumed from {resume_dir} at step {start_step}")
 
     if use_fsdp:
         pspecs = fsdp.fsdp_param_pspecs(spec, layout)
@@ -280,7 +377,8 @@ def main():
                 nodes=args.nodes, shard=args.shard, mode=args.mode,
                 gossip_mode=gossip_mode, budget=args.budget,
                 steps=args.steps, batch_per_node=args.batch_per_node,
-                seq=args.seq,
+                seq=args.seq, p_drop=args.p_drop,
+                fault_seed=args.fault_seed,
             ))
         timer = StepTimer(recorder)
         # Phased executors (per-phase fenced timing) for the sequential
@@ -311,23 +409,25 @@ def main():
                     if phased:
                         step_cache[key] = fsdp.make_phased_fsdp_train_step(
                             model, opt, plan, spec, layout, timer=timer,
-                            gossip_mode=gossip_mode,
+                            gossip_mode=gossip_mode, faulted=faulted,
                         )
                     else:
                         step_cache[key] = fsdp.make_fsdp_train_step(
                             model, opt, plan, spec, layout,
-                            gossip_mode=gossip_mode,
+                            gossip_mode=gossip_mode, faulted=faulted,
                         )
                 elif phased:
                     step_cache[key] = dt.make_phased_train_step(
                         model, opt, plan, spec, timer=timer,
                         gossip_mode=gossip_mode, active=tuple(active),
+                        faulted=faulted,
                     )
                 else:
                     step_cache[key] = dt.make_train_step(
                         model, opt, plan, spec,
                         gossip_mode=gossip_mode, active=tuple(active),
                         bucket_plan=bplan if gossip_mode == "overlap" else None,
+                        faulted=faulted,
                     )
             return step_cache[key]
 
@@ -349,6 +449,11 @@ def main():
             iid=not args.non_iid, seed=args.seed,
         )
         it = iter(data)
+        # resume: replay the consumed prefix so step k sees the same
+        # batch it would in an uninterrupted run (the pipeline is a
+        # seeded stream, not step-indexed)
+        for _ in range(start_step):
+            next(it)
 
         # comm probes: each matching's exchange measured as its own
         # fenced executable (once, up front; "comm" lane in the trace),
@@ -386,9 +491,17 @@ def main():
         for k in range(start_step, args.steps):
             batch = next(it)
             active = schedule.active_indices(k)
-            bits = jnp.asarray(
-                schedule.activations[k].astype(np.float32)
-            )
+            if faulted:
+                # per-node effective rows: activation bit x link-survival
+                # gate, symmetric across every matching edge (a dropped
+                # exchange zeroes the delta at BOTH endpoints)
+                bits = jnp.asarray(
+                    fault_sched.node_bits(schedule.activations[k], k)
+                )
+            else:
+                bits = jnp.asarray(
+                    schedule.activations[k].astype(np.float32)
+                )
             stepf = get_step(active)
             t0s = time.perf_counter()
             with timer.phase("step", cat="step", step=k) as sp:
@@ -411,6 +524,26 @@ def main():
                     # paper's delay model: one unit per activated matching
                     sim_time += schedule.comm_units(k) + 1.0   # +1 compute
                 sp.fence((params, losses))
+            if fault_sched is not None:
+                # stragglers stretch the simulated clock: the paper's
+                # delay model is synchronous, so the step costs the
+                # slowest node's extra units
+                delay = fault_sched.max_delay(k)
+                sim_time += delay
+                if traced:
+                    dropped = fault_sched.dropped_links(
+                        schedule.activations[k], k
+                    )
+                    if dropped:
+                        tprobes.fault_event(
+                            recorder, step=k, kind="link_drop",
+                            dropped_exchanges=dropped,
+                        )
+                    if delay:
+                        tprobes.fault_event(
+                            recorder, step=k, kind="straggler",
+                            delay_units=delay,
+                        )
             if traced:
                 step_ms = (time.perf_counter() - t0s) * 1e3
                 if phased:
@@ -447,13 +580,24 @@ def main():
                     flush(params, gstate) if gossip_mode == "overlap"
                     else params
                 )
-                ckpt_lib.save_run(
+                # crash-safe history layout: each checkpoint lands in
+                # its own step_XXXXXXXX/ dir (ckpt.json written last as
+                # the completeness marker) — a crash mid-save can never
+                # damage an earlier restorable checkpoint. Transient
+                # filesystem errors retry with bounded backoff.
+                retry_with_backoff(lambda: ckpt_lib.save_run_step(
                     args.ckpt_dir, eval_params(save_params),
                     eval_opt_state(opt_state), step=k + 1,
                     extra={"shard": args.shard,
                            "stream_layers": bool(args.stream_layers),
                            "stream_scan": bool(args.stream_scan)},
-                )
+                    keep_last=args.keep_last,
+                ))
+            if fault_spec.crash_at_step == k:
+                if traced:
+                    tprobes.fault_event(recorder, step=k, kind="crash")
+                print(f"fault: simulated crash after completing step {k}")
+                raise SimulatedCrash(k)
 
         if gossip_mode == "overlap":
             # land the exchange still in flight from the last step
@@ -462,12 +606,13 @@ def main():
             print(f"flushed in-flight gossip: consensus {cons:.3e}")
 
         if args.ckpt_dir:
-            ckpt_lib.save_run(
+            retry_with_backoff(lambda: ckpt_lib.save_run_step(
                 args.ckpt_dir, eval_params(params), eval_opt_state(opt_state),
                 step=args.steps, extra={"shard": args.shard,
                            "stream_layers": bool(args.stream_layers),
                            "stream_scan": bool(args.stream_scan)},
-            )
+                keep_last=args.keep_last,
+            ))
         if args.csv:
             os.makedirs(os.path.dirname(args.csv) or ".", exist_ok=True)
             import csv as csvmod

@@ -219,6 +219,28 @@ def measure_fsdp_collectives(
 
 
 # ---------------------------------------------------------------------------
+# Fault events
+# ---------------------------------------------------------------------------
+def fault_event(recorder, *, step: int, kind: str, **extras) -> None:
+    """Record one injected-fault event in the trace stream.
+
+    ``kind`` names the fault (``"link_drop"``, ``"straggler"``,
+    ``"crash"``); ``extras`` carry its parameters (dropped-exchange
+    count, delay units, ...). Events land with ``cat="fault"`` on the
+    comm thread lane as zero-duration instants, so a Perfetto view of a
+    faulted run shows exactly where the schedule injected what. A
+    ``None`` recorder no-ops — the untraced loop pays nothing."""
+    if recorder is None:
+        return
+    from repro.telemetry.trace import TraceEvent
+
+    recorder.record(TraceEvent(
+        name=f"fault/{kind}", cat="fault", ts_us=recorder.now_us(),
+        dur_us=0.0, step=int(step), tid=1, args=dict(extras),
+    ))
+
+
+# ---------------------------------------------------------------------------
 # Per-step metrics
 # ---------------------------------------------------------------------------
 def step_metrics(

@@ -71,6 +71,109 @@ def test_per_node_restore_validates_file_count(tmp_path):
         ckpt.restore_run(directory)
 
 
+# ---------------------------------------------------------------------------
+# Crash safety (docs/fault_model.md): atomic writes, checksums, history
+# ---------------------------------------------------------------------------
+def _tiny_run(n=4):
+    params = {"w": jnp.arange(n, dtype=jnp.float32)[:, None] * jnp.ones((1, 3))}
+    opt_state = {"step": jnp.full((n,), 7, jnp.int32)}
+    return params, opt_state
+
+
+def test_truncated_file_raises_named_corrupt_error(tmp_path):
+    """Regression for the pre-atomic save: a torn/truncated checkpoint
+    file must raise ``CheckpointCorruptError`` naming the file and the
+    remedy, never load garbage or crash opaquely inside np.load."""
+    import os
+
+    params, opt_state = _tiny_run()
+    directory = str(tmp_path / "run")
+    ckpt.save_run(directory, params, opt_state, step=3, per_node_files=True)
+
+    victim = os.path.join(directory, "node_02.npz")
+    payload = open(victim, "rb").read()
+    with open(victim, "wb") as f:
+        f.write(payload[: len(payload) // 2])       # truncate
+    with pytest.raises(ckpt.CheckpointCorruptError) as exc:
+        ckpt.restore_run(directory)
+    assert "node_02.npz" in str(exc.value)
+    assert "earlier complete one" in str(exc.value)
+
+    # same size but flipped content: the CRC32 check catches it
+    with open(victim, "wb") as f:
+        f.write(payload[:100] + bytes([payload[100] ^ 0xFF]) + payload[101:])
+    with pytest.raises(ckpt.CheckpointCorruptError, match="CRC32"):
+        ckpt.restore_run(directory)
+
+    with open(victim, "wb") as f:                   # repaired: loads again
+        f.write(payload)
+    ckpt.restore_run(directory)
+
+
+def test_save_is_atomic_no_tmp_left_behind(tmp_path):
+    """Every write goes through tmp + rename: after a save the directory
+    holds only final files, and re-saving overwrites via rename (an
+    interrupted re-save can never tear the existing checkpoint)."""
+    params, opt_state = _tiny_run()
+    directory = str(tmp_path / "run")
+    ckpt.save_run(directory, params, opt_state, step=1)
+    ckpt.save_run(directory, params, opt_state, step=2)
+    import os
+
+    leftovers = [f for f in os.listdir(directory) if ".tmp." in f]
+    assert leftovers == [], f"temp files left behind: {leftovers}"
+    _, _, step = ckpt.restore_run(directory)
+    assert step == 2
+
+
+def test_history_layout_resume_and_pruning(tmp_path):
+    """save_run_step's step_XXXXXXXX/ history: find_resumable resolves
+    the newest complete entry, skips torn/incomplete ones (crash
+    mid-save), restore_run delegates from the root, and keep_last
+    prunes oldest-first."""
+    import os
+
+    params, opt_state = _tiny_run()
+    root = str(tmp_path / "hist")
+    for s in (2, 4, 6):
+        d = ckpt.save_run_step(
+            root, params, opt_state, step=s, keep_last=3)
+        assert d == ckpt.step_dir(root, s) and os.path.isdir(d)
+    assert ckpt.find_resumable(root) == ckpt.step_dir(root, 6)
+    # the root itself restores: delegation to the newest complete entry
+    _, _, step = ckpt.restore_run(root)
+    assert step == 6
+
+    # crash mid-save of step 8: ckpt.json (written last) never landed
+    torn = ckpt.step_dir(root, 8)
+    os.makedirs(torn)
+    with open(os.path.join(torn, "params.npz"), "wb") as f:
+        f.write(b"half a checkpoint")
+    assert ckpt.find_resumable(root) == ckpt.step_dir(root, 6)
+
+    # newest *complete-looking* entry fails its checksum: fall back
+    with open(os.path.join(ckpt.step_dir(root, 6), "params.npz"), "wb") as f:
+        f.write(b"also torn")
+    assert ckpt.find_resumable(root) == ckpt.step_dir(root, 4)
+    _, _, step = ckpt.restore_run(root)
+    assert step == 4
+
+    # keep_last=2 prunes the oldest complete entries on the next save
+    ckpt.save_run_step(root, params, opt_state, step=10, keep_last=2)
+    kept = sorted(f for f in os.listdir(root) if f.startswith("step_"))
+    assert kept == ["step_00000008", "step_00000010"]
+    assert ckpt.find_resumable(root) == ckpt.step_dir(root, 10)
+
+
+def test_find_resumable_empty_and_missing(tmp_path):
+    import os
+
+    assert ckpt.find_resumable(str(tmp_path / "nope")) is None
+    empty = str(tmp_path / "empty")
+    os.makedirs(empty)
+    assert ckpt.find_resumable(empty) is None
+
+
 @pytest.mark.parametrize("per_node_files", [False, True])
 def test_stacked_state_roundtrip(tmp_path, per_node_files):
     cfg = get_smoke_config("internlm2_1_8b")
